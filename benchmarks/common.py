@@ -1,0 +1,81 @@
+"""Shared benchmark helpers: train a small LM, evaluate PPL/accuracy."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import Config
+from repro.configs import get_config
+from repro.data import MarkovLM, SentimentTask, calibration_batches
+from repro.models import transformer as T
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def bench_config(arch: str = "opt-proxy", **model_over) -> Config:
+    cfg = get_config(arch, smoke=True)
+    for k, v in model_over.items():
+        setattr(cfg.model, k, v)
+    cfg.model.__post_init__()
+    return cfg
+
+
+def train_lm(cfg: Config, steps: int = 80, lr: float = 3e-3,
+             batch: int = 8, seq: int = 32, seed: int = 0,
+             mix_sentiment: bool = True):
+    """Train on the Markov stream (+ sentiment batches so the downstream
+    task is in-distribution, like the paper's instruction-tuned models)."""
+    cfg.train.lr = lr
+    cfg.train.warmup_steps = max(2, steps // 10)
+    cfg.train.steps = steps
+    st = init_train_state(cfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(cfg))
+    lm = MarkovLM(cfg.model.vocab_size, seed=seed, branching=3)
+    sent = SentimentTask(cfg.model.vocab_size, seed=seed)
+    for i in range(steps):
+        if mix_sentiment and i % 3 == 2:
+            b, _ = sent.batch(batch, seq)
+        else:
+            b = lm.batch(batch, seq)
+        st, m = step(st, b)
+    return st.params, lm, sent
+
+
+def eval_ppl(cfg: Config, params, lm: MarkovLM, n: int = 4, batch: int = 8,
+             seq: int = 32) -> float:
+    lm_eval = MarkovLM(cfg.model.vocab_size, seed=lm.seed, branching=3)
+    lm_eval.step = 50_000
+    tot, cnt = 0.0, 0
+    for _ in range(n):
+        toks = lm_eval.batch(batch, seq)["tokens"]
+        logits, _ = T.forward(cfg.model, params, toks)
+        logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+        gold = jnp.take_along_axis(logits[:, :-1], toks[:, 1:, None],
+                                   axis=-1)[..., 0]
+        tot += float(jnp.sum(logz - gold))
+        cnt += int(toks[:, 1:].size)
+    return float(np.exp(tot / cnt))
+
+
+def eval_sentiment(cfg: Config, params, sent: SentimentTask,
+                   n: int = 128, seq: int = 24) -> float:
+    ev = SentimentTask(cfg.model.vocab_size, seed=sent.seed)
+    ev.step = 50_000
+    batch, labels = ev.batch(n, seq)
+    logits, _ = T.forward(cfg.model, params, batch["tokens"])
+    return ev.accuracy(logits[:, -2], labels)
+
+
+def make_calib(cfg: Config, lm: MarkovLM, n_batches: int = 4,
+               batch: int = 8, seq: int = 32):
+    src = MarkovLM(cfg.model.vocab_size, seed=lm.seed, branching=3)
+    return calibration_batches(src, n_batches, batch, seq)
+
+
+def param_bytes(params) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(params)
+               if hasattr(l, "dtype"))

@@ -1,0 +1,55 @@
+"""Roofline tables from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Reads artifacts/dryrun/*.json and renders, per (arch × shape × mesh):
+compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs
+ratio and the roofline fraction. Run after ``repro.launch.dryrun --all``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(art_dir: str = "artifacts/dryrun") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful | roofline |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{r['dominant']} | {r.get('useful_fraction', 0):.3f} | "
+            f"{r.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(out)
+
+
+def run() -> List[Dict]:
+    rows = load()
+    return [{
+        "table": "roofline", "arch": r["arch"], "shape": r["shape"],
+        "mesh": r["mesh"], "dominant": r["dominant"],
+        "t_compute_s": round(r["t_compute_s"], 5),
+        "t_memory_s": round(r["t_memory_s"], 5),
+        "t_collective_s": round(r["t_collective_s"], 5),
+        "roofline_fraction": round(r.get("roofline_fraction", 0.0), 5),
+    } for r in rows]
+
+
+if __name__ == "__main__":
+    rows = load()
+    print("## single pod (16x16)\n")
+    print(table(rows, "16x16"))
+    print("\n## multi-pod (2x16x16)\n")
+    print(table(rows, "2x16x16"))

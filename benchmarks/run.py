@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table + the roofline summary.
+
+    PYTHONPATH=src python -m benchmarks.run [table1 table2 ...]
+
+Writes artifacts/bench/<table>.json and prints a flat CSV-ish summary.
+Set REPRO_BENCH_STEPS to raise the training budget (default keeps the whole
+suite a few CPU-minutes)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    steps = int(os.environ.get("REPRO_BENCH_STEPS", "100"))
+
+    from benchmarks import (table1_lm_quality, table2_vlm_overfit,
+                            table3_memory, table4_time, table5_convergence,
+                            roofline)
+    suites = {
+        "table1": lambda: table1_lm_quality.run(steps=steps),
+        "table2": lambda: table2_vlm_overfit.run(steps=max(40, steps // 2)),
+        "table3": table3_memory.run,
+        "table4": table4_time.run,
+        "table5": lambda: table5_convergence.run(steps=max(40, steps // 2)),
+        "roofline": roofline.run,
+    }
+    wanted = argv or list(suites)
+    os.makedirs("artifacts/bench", exist_ok=True)
+    all_rows = []
+    for name in wanted:
+        t0 = time.perf_counter()
+        print(f"== {name} ==", flush=True)
+        rows = suites[name]()
+        dt = time.perf_counter() - t0
+        with open(f"artifacts/bench/{name}.json", "w") as f:
+            json.dump(rows, f, indent=1)
+        for r in rows:
+            print("  " + ",".join(f"{k}={v}" for k, v in r.items()))
+        print(f"  ({dt:.1f}s)")
+        all_rows.extend(rows)
+    print(f"\nwrote {len(all_rows)} rows to artifacts/bench/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 4: quantization wall time — GPTQ vs RPIQ (ΔT).
+
+Across model widths; RPIQ's stage 2 adds a bounded, roughly width-
+proportional overhead (paper: +12-18s on 7-13B GPUs; CPU-scale here)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import bench_config, make_calib, train_lm
+from repro.core.pipeline import quantize_model
+from repro.data import MarkovLM, calibration_batches
+from repro.models import transformer as T
+
+
+def run() -> list:
+    rows = []
+    for d_model, d_ff, layers in ((64, 256, 2), (128, 512, 2),
+                                  (128, 512, 4)):
+        cfg = bench_config("opt-proxy", d_model=d_model, d_ff=d_ff,
+                           num_layers=layers,
+                           num_heads=max(4, d_model // 16),
+                           num_kv_heads=max(4, d_model // 16))
+        cfg.model.head_dim = 0
+        cfg.model.__post_init__()
+        params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+        calib = calibration_batches(
+            MarkovLM(cfg.model.vocab_size, seed=0), 3, 4, 32)
+
+        cfg_g = bench_config("opt-proxy", d_model=d_model, d_ff=d_ff,
+                             num_layers=layers,
+                             num_heads=max(4, d_model // 16),
+                             num_kv_heads=max(4, d_model // 16))
+        cfg_g.model.head_dim = 0
+        cfg_g.model.__post_init__()
+        cfg_g.quant.rpiq_iters = 0
+        t0 = time.perf_counter()
+        quantize_model(cfg_g, params, calib)
+        t_gptq = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        _, rep = quantize_model(cfg, params, calib)
+        t_rpiq = time.perf_counter() - t0
+        rows.append({
+            "table": "table4", "d_model": d_model, "layers": layers,
+            "t_gptq_s": round(t_gptq, 2), "t_rpiq_s": round(t_rpiq, 2),
+            "delta_s": round(t_rpiq - t_gptq, 2),
+            "stage2_s": round(rep.seconds_stage2, 2),
+        })
+    return rows

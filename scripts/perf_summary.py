@@ -1,0 +1,82 @@
+"""Render the §Perf before/after table from dry-run artifacts.
+
+    PYTHONPATH=src python scripts/perf_summary.py
+
+Baselines in artifacts/dryrun (paper-faithful substrate,
+model.opt_attention=false, GSPMD MoE dispatch); optimized runs in
+artifacts/dryrun_opt. Also appends the falcon-mamba Pallas
+selective-scan substitution (analytic; the kernel can't execute on the CPU
+container — formulas below, kernel correctness validated in interpret
+mode by tests/test_kernels.py).
+"""
+import json
+import os
+import sys
+
+BASE = "artifacts/dryrun"
+OPT = "artifacts/dryrun_opt"
+
+
+def load(d, name):
+    p = os.path.join(d, name)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def main():
+    lines = ["# §Perf before/after (dominant-term seconds, per device)", ""]
+    lines += ["| cell | mesh | term | baseline | optimized | win |",
+              "|---|---|---|---|---|---|"]
+    for name in sorted(os.listdir(OPT)):
+        o = load(OPT, name)
+        b = load(BASE, name)
+        if not o or not b:
+            continue
+        cell = f"{o['arch']} × {o['shape']}"
+        for term in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            win = b[term] / o[term] if o[term] > 0 else float("inf")
+            mark = " **(dominant)**" if b["dominant"] == \
+                term.split("_")[1] else ""
+            lines.append(f"| {cell} | {o['mesh']} | {term[2:-2]}{mark} | "
+                         f"{b[term]:.4f} | {o[term]:.4f} | {win:.2f}× |")
+
+    # falcon-mamba selective-scan substitution (documented analytic model)
+    fm = load(BASE, "falcon-mamba-7b__prefill_32k__16x16.json")
+    if fm:
+        total = fm["per_device_bytes"]
+        # measured scan-subgraph bytes from hlo_text.attribute on this cell:
+        # the inner associative-scan while (state-expansion traffic).
+        scan_bytes = 3.406e12
+        # kernel HBM I/O per device: u(bf16)+dt(f32) reads + y(bf16) write
+        # over (B/16=2, S=32768, d_inner/16=512) × 64 layers (+B/C, small)
+        kern_io = 64 * (2 * 32768 * 512 * (2 + 4 + 2) + 2 * 32768 * 16 * 8)
+        bytes_opt = total - scan_bytes + kern_io
+        hbm = 819e9
+        lines += ["", "## falcon-mamba-7b × prefill_32k — Pallas "
+                  "selective-scan substitution (16×16)", "",
+                  f"- baseline memory term (measured): "
+                  f"{total/hbm:.3f} s ({total:.3e} B/device)",
+                  f"- scan-subgraph share (measured, hlo_text.attribute): "
+                  f"{scan_bytes:.3e} B",
+                  f"- kernel HBM I/O (analytic): {kern_io:.3e} B",
+                  f"- **with-kernel memory term: {bytes_opt/hbm:.3f} s "
+                  f"({total/bytes_opt:.2f}× on the term)**",
+                  "",
+                  "Caveat (recorded hypothesis-refutation): the kernel "
+                  "removes the HBM bottleneck but exposes a VPU ceiling — "
+                  "~2.1e14 vector ops/device (6 ops × B·S·d·n·L local) at "
+                  "~12e12 f32 op/s ≈ 17 s, i.e. Mamba-1's diagonal scan is "
+                  "VPU-bound on TPU. Moving the win to wall-clock needs the "
+                  "SSD chunked-matmul formulation (MXU-friendly); recorded "
+                  "as the next §Perf iteration in EXPERIMENTS.md."]
+    out = "\n".join(lines) + "\n"
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/perf_summary.md", "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,276 @@
+"""Configuration system for the repro framework.
+
+Plain dataclasses + dict overrides + a tiny CLI layer. No external deps.
+
+Every launchable entry point takes ``--arch <id>`` (resolved through
+``repro.configs.registry``) plus ``key=value`` dotted overrides, e.g.::
+
+    python -m repro.launch.dryrun --arch minicpm-2b --shape train_4k \
+        parallel.sp=true quant.bits=4
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field, fields, is_dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MoEConfig:
+    num_experts: int = 0            # 0 => dense
+    top_k: int = 0
+    d_ff_expert: int = 0            # per-expert hidden dim
+    num_shared_experts: int = 0     # deepseek-style always-on experts
+    first_dense_layers: int = 0     # leading layers that stay dense
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.001
+    router_dtype: str = "float32"
+
+
+@dataclass
+class MLAConfig:
+    """Multi-head latent attention (deepseek-v3)."""
+    enabled: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass
+class SSMConfig:
+    """Mamba-1 block configuration."""
+    enabled: bool = False
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                # 0 => ceil(d_model/16)
+
+
+@dataclass
+class RGLRUConfig:
+    """RG-LRU recurrent block (recurrentgemma)."""
+    enabled: bool = False
+    lru_width: int = 0              # 0 => d_model
+    conv1d_width: int = 4
+
+
+@dataclass
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"           # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0               # 0 => d_model // num_heads
+    d_ff: int = 512
+    vocab_size: int = 512
+    max_seq_len: int = 8192
+
+    # block pattern: list of block kinds, cycled over the layer stack.
+    # kinds: "attn", "swa", "local", "rglru", "mamba", ("mla" via mla.enabled)
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window_size: int = 0            # sliding/local attention window (0 = full)
+
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "silu"               # silu (gated) | gelu (ungated)
+    gated_mlp: bool = True
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    logits_softcap: float = 0.0
+    attn_logits_softcap: float = 0.0
+    dtype: str = "bfloat16"         # compute dtype
+    param_dtype: str = "float32"    # master param dtype (training)
+
+    # architecture add-ons
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    rglru: RGLRUConfig = field(default_factory=RGLRUConfig)
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq_len: int = 1500     # frames after the (stubbed) conv frontend
+
+    # modality frontend stub: "none" | "audio" | "vision"
+    frontend: str = "none"
+    frontend_tokens: int = 0        # patch/frame tokens prepended at prefill
+
+    # multi-token prediction (deepseek)
+    mtp_depth: int = 0
+    mtp_loss_weight: float = 0.3
+
+    # beyond-paper perf toggles (§Perf hillclimb; False = naive baseline)
+    opt_attention: bool = True      # bf16 cache/score einsums, no repeat_kv
+    #                                 materialization (measured 2-2.5×
+    #                                 decode/train memory-term win)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            self.head_dim = self.d_model // self.num_heads
+        if self.ssm.enabled and self.ssm.dt_rank == 0:
+            self.ssm.dt_rank = max(1, -(-self.d_model // 16))
+        if self.rglru.enabled and self.rglru.lru_width == 0:
+            self.rglru.lru_width = self.d_model
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    def is_subquadratic(self) -> bool:
+        """True if the arch supports unbounded-context decode with bounded state."""
+        kinds = set(self.layer_kinds)
+        return kinds.issubset({"swa", "local", "rglru", "mamba"})
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / runtime configuration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParallelConfig:
+    data: int = 1
+    model: int = 1
+    pod: int = 1
+    # strategy toggles
+    fsdp: bool = True               # shard params/opt-state over data axis
+    sp: bool = False                # Megatron-style sequence sharding over model
+    ep: bool = True                 # expert parallel MoE over model axis
+    pipeline_stages: int = 1        # >1 => GPipe over pod axis
+    pp_microbatches: int = 8
+    remat: str = "full"             # none | full | dots
+    scan_layers: bool = True
+    # distributed-optimization tricks
+    grad_compression: str = "none"  # none | bf16 | int8 (explicit-DP mode)
+    int8_optimizer_state: bool = False
+    overlap_collectives: bool = True   # XLA latency hiding scheduler hints
+    ep_local_dispatch: bool = True  # shard_map MoE routing per data shard
+    #                                 (False = pure-GSPMD global dispatch —
+    #                                 the §Perf cell-B baseline)
+
+
+@dataclass
+class QuantConfig:
+    bits: int = 4
+    group_size: int = 128
+    symmetric: bool = False
+    percdamp: float = 0.01
+    blocksize: int = 128            # GPTQ lazy-update block
+    # RPIQ stage 2
+    rpiq_iters: int = 5
+    rpiq_alpha: float = 0.01        # paper-faithful step size
+    rpiq_early_stop: bool = True
+    rpiq_use_global_hessian: bool = True   # eq. 12-14: block-diag of damped H
+    keep_best_projection: bool = True
+    calib_batches: int = 8
+    calib_batch_size: int = 16
+    calib_seq_len: int = 512
+    act_order: bool = False
+    kernel_impl: str = "xla"        # xla | pallas (serving matmul backend)
+
+
+@dataclass
+class TrainConfig:
+    global_batch_size: int = 8
+    seq_len: int = 128
+    steps: int = 100
+    lr: float = 3e-4
+    warmup_steps: int = 10
+    schedule: str = "cosine"        # cosine | wsd | constant
+    wsd_stable_frac: float = 0.8
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    grad_accum: int = 1
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 200
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 = greedy
+    quantized: bool = True          # serve int4-packed weights
+    prefill_chunk: int = 0          # 0 = single-shot prefill
+
+
+@dataclass
+class Config:
+    model: ModelConfig = field(default_factory=ModelConfig)
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    quant: QuantConfig = field(default_factory=QuantConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
+
+
+# ---------------------------------------------------------------------------
+# Override machinery
+# ---------------------------------------------------------------------------
+
+def _coerce(value: str, current: Any) -> Any:
+    if isinstance(current, bool):
+        return value.lower() in ("1", "true", "yes", "on")
+    if isinstance(current, int):
+        return int(value)
+    if isinstance(current, float):
+        return float(value)
+    if isinstance(current, tuple):
+        parts = [p for p in value.split(",") if p]
+        return tuple(parts)
+    return value
+
+
+def apply_overrides(cfg: Any, overrides: Dict[str, str]) -> Any:
+    """Apply dotted-path string overrides to a (nested) dataclass, in place."""
+    for key, value in overrides.items():
+        parts = key.split(".")
+        obj = cfg
+        for p in parts[:-1]:
+            obj = getattr(obj, p)
+        leaf = parts[-1]
+        if not hasattr(obj, leaf):
+            raise KeyError(f"unknown config key: {key}")
+        setattr(obj, leaf, _coerce(value, getattr(obj, leaf))
+                if isinstance(value, str) else value)
+    return cfg
+
+
+def parse_overrides(argv: List[str]) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for a in argv:
+        if "=" not in a:
+            raise ValueError(f"override must be key=value, got {a!r}")
+        k, v = a.split("=", 1)
+        out[k] = v
+    return out
+
+
+def to_dict(cfg: Any) -> Any:
+    if is_dataclass(cfg):
+        return {f.name: to_dict(getattr(cfg, f.name)) for f in fields(cfg)}
+    if isinstance(cfg, (list, tuple)):
+        return [to_dict(x) for x in cfg]
+    return cfg
+
+
+def config_fingerprint(cfg: Any) -> str:
+    import hashlib
+    return hashlib.sha256(json.dumps(to_dict(cfg), sort_keys=True,
+                                     default=str).encode()).hexdigest()[:16]

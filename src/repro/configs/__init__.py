@@ -1,0 +1,3 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.registry import (ARCH_IDS, get_config, input_shapes,
+                                    shape_names_for)  # noqa: F401

@@ -1,0 +1,36 @@
+"""falcon-mamba-7b [ssm] — pure Mamba-1, attention-free.
+
+64L, d_model 4096 (d_inner 8192), ssm_state 16, vocab 65024.
+[arXiv:2410.05355; unverified]. O(1) decode state ⇒ runs long_500k.
+"""
+from repro.config import Config, ModelConfig, SSMConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="falcon-mamba-7b", family="ssm",
+        num_layers=64, d_model=4096, num_heads=1, num_kv_heads=1,
+        d_ff=0, vocab_size=65024,
+        block_pattern=("mamba",),
+        norm="rmsnorm",
+        ssm=SSMConfig(enabled=True, d_state=16, d_conv=4, expand=2),
+        max_seq_len=524288 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="falcon-mamba-smoke", family="ssm",
+        num_layers=3, d_model=64, num_heads=1, num_kv_heads=1,
+        d_ff=0, vocab_size=128,
+        block_pattern=("mamba",),
+        norm="rmsnorm",
+        ssm=SSMConfig(enabled=True, d_state=8, d_conv=4, expand=2),
+        max_seq_len=64,
+    )
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

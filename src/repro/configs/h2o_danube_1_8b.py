@@ -1,0 +1,34 @@
+"""h2o-danube-1.8b [dense] — llama+mistral mix with sliding-window attention.
+
+24L, d_model 2560, 32 heads (GQA kv=8), d_ff 6912, vocab 32000, SWA window
+4096. [arXiv:2401.16818; hf]. Sub-quadratic decode (ring-buffer cache) ⇒
+runs the long_500k cell.
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="h2o-danube-1.8b", family="dense",
+        num_layers=24, d_model=2560, num_heads=32, num_kv_heads=8,
+        d_ff=6912, vocab_size=32000,
+        block_pattern=("swa",), window_size=4096,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        max_seq_len=524288 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="h2o-danube-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=160, vocab_size=128,
+        block_pattern=("swa",), window_size=8,
+        norm="rmsnorm", act="silu", gated_mlp=True, max_seq_len=64,
+    )
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

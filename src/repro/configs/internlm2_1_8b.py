@@ -1,0 +1,31 @@
+"""internlm2-1.8b [dense] — GQA 16 heads / 8 kv heads.
+
+24L, d_model 2048, 16H (kv=8), d_ff 8192, vocab 92544.
+[arXiv:2403.17297; hf].
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="internlm2-1.8b", family="dense",
+        num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+        d_ff=8192, vocab_size=92544,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        max_seq_len=32768 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="internlm2-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=192, vocab_size=128,
+        norm="rmsnorm", act="silu", gated_mlp=True, max_seq_len=64,
+    )
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

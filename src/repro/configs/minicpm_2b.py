@@ -1,0 +1,34 @@
+"""minicpm-2b [dense] — llama-like, WSD schedule, tied embeddings.
+
+40L, d_model 2304, 36 heads (kv=36), d_ff 5760, vocab 122753.
+[arXiv:2404.06395; hf]. Trains with the WSD schedule (train.schedule).
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="minicpm-2b", family="dense",
+        num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+        d_ff=5760, vocab_size=122753,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        tie_embeddings=True, max_seq_len=32768 + 8,
+    )
+    cfg.train.schedule = "wsd"
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="minicpm-smoke", family="dense",
+        num_layers=2, d_model=72, num_heads=6, num_kv_heads=6,
+        d_ff=160, vocab_size=128,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        tie_embeddings=True, max_seq_len=64,
+    )
+    cfg.train.schedule = "wsd"
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

@@ -1,0 +1,35 @@
+"""opt-proxy — the paper's own evaluation family (OPT-style decoder LM).
+
+The paper quantizes OPT-6.7B/13B, Qwen3-8B, LLaMA-3.1-8B; this proxy keeps
+the OPT block structure (LayerNorm, ungated GELU MLP, d_ff = 4·d_model,
+biases) at a CPU-trainable scale so benchmarks/table1 can train → quantize →
+evaluate the fp16 / GPTQ / RPIQ triple end-to-end. RoPE replaces OPT's
+learned positions (positional scheme is orthogonal to the quantizer; noted
+in DESIGN.md).
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="opt-proxy", family="dense",
+        num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        d_ff=3072, vocab_size=50304,
+        norm="layernorm", act="gelu", gated_mlp=False,
+        max_seq_len=4096,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="opt-proxy-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=256, vocab_size=256,
+        norm="layernorm", act="gelu", gated_mlp=False, max_seq_len=64,
+    )
+    cfg.quant.group_size = 16
+    cfg.quant.blocksize = 16
+    return cfg

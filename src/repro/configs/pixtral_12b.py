@@ -1,0 +1,35 @@
+"""pixtral-12b [vlm] — mistral-nemo LM backbone, pixtral-ViT stubbed.
+
+40L, d_model 5120, 32 heads (GQA kv=8, head_dim 128), d_ff 14336, vocab
+131072. [hf:mistralai/Pixtral-12B-2409; unverified]. The vision frontend is
+a stub: ``input_specs()`` supplies precomputed (B, 1024, 5120) patch
+embeddings prepended to the text tokens.
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="pixtral-12b", family="vlm",
+        num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+        head_dim=128, d_ff=14336, vocab_size=131072,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        frontend="vision", frontend_tokens=1024,
+        max_seq_len=32768 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="pixtral-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=160, vocab_size=128,
+        norm="rmsnorm", act="silu", gated_mlp=True,
+        frontend="vision", frontend_tokens=8, max_seq_len=64,
+    )
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

@@ -1,0 +1,38 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 2 recurrent : 1.
+
+38L, d_model 4096, 16 heads (MQA kv=1), d_ff 12288, vocab 256000, local
+window 2048, lru_width 4096. [arXiv:2402.19427; unverified]. Bounded decode
+state (LRU h + 2048-token ring) ⇒ runs long_500k.
+"""
+from repro.config import Config, ModelConfig, RGLRUConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="recurrentgemma-9b", family="hybrid",
+        num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+        d_ff=12288, vocab_size=256000,
+        block_pattern=("rglru", "rglru", "local"), window_size=2048,
+        norm="rmsnorm", act="gelu", gated_mlp=True,
+        rglru=RGLRUConfig(enabled=True, lru_width=4096, conv1d_width=4),
+        logits_softcap=30.0, tie_embeddings=True,
+        max_seq_len=524288 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="recurrentgemma-smoke", family="hybrid",
+        num_layers=5, d_model=64, num_heads=4, num_kv_heads=1,
+        d_ff=160, vocab_size=128,
+        block_pattern=("rglru", "rglru", "local"), window_size=8,
+        norm="rmsnorm", act="gelu", gated_mlp=True,
+        rglru=RGLRUConfig(enabled=True, lru_width=64, conv1d_width=4),
+        logits_softcap=30.0, tie_embeddings=True, max_seq_len=64,
+    )
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

@@ -1,0 +1,31 @@
+"""stablelm-1.6b [dense] — LayerNorm + gated SiLU MLP.
+
+24L, d_model 2048, 32 heads (kv=32), d_ff 5632, vocab 100352.
+[hf:stabilityai/stablelm-2-1_6b; unverified].
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="stablelm-1.6b", family="dense",
+        num_layers=24, d_model=2048, num_heads=32, num_kv_heads=32,
+        d_ff=5632, vocab_size=100352,
+        norm="layernorm", act="silu", gated_mlp=True,
+        max_seq_len=32768 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="stablelm-smoke", family="dense",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=160, vocab_size=128,
+        norm="layernorm", act="silu", gated_mlp=True, max_seq_len=64,
+    )
+    cfg.quant.group_size = 8
+    cfg.quant.blocksize = 8
+    return cfg

@@ -1,0 +1,39 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend stubbed.
+
+32 encoder + 32 decoder layers, d_model 1280, 20 heads (kv=20), d_ff 5120,
+vocab 51866. [arXiv:2212.04356; unverified]. The conv frontend is a stub:
+``input_specs()`` supplies precomputed (B, 1500, 1280) frame embeddings.
+LayerNorm + GELU (ungated), fixed sinusoidal positions (the published model
+uses learned decoder positions; sinusoidal keeps the stub parameter-free —
+recorded in DESIGN.md hardware/assumption notes).
+"""
+from repro.config import Config, ModelConfig
+
+
+def full() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="whisper-large-v3", family="audio",
+        num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20,
+        d_ff=5120, vocab_size=51866,
+        norm="layernorm", act="gelu", gated_mlp=False, use_rope=False,
+        is_encoder_decoder=True, encoder_layers=32, encoder_seq_len=1500,
+        frontend="audio", frontend_tokens=1500,
+        max_seq_len=32768 + 8,
+    )
+    return cfg
+
+
+def smoke() -> Config:
+    cfg = Config()
+    cfg.model = ModelConfig(
+        name="whisper-smoke", family="audio",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=128,
+        norm="layernorm", act="gelu", gated_mlp=False, use_rope=False,
+        is_encoder_decoder=True, encoder_layers=2, encoder_seq_len=16,
+        frontend="audio", frontend_tokens=16, max_seq_len=64,
+    )
+    cfg.quant.group_size = 16
+    cfg.quant.blocksize = 16
+    return cfg

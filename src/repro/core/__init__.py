@@ -1,0 +1,5 @@
+"""RPIQ core: the paper's contribution as a composable JAX module."""
+from repro.core.quant import (QuantParams, QuantizedTensor, compute_qparams,
+                              fake_quantize, pack_quantized, dequantize_packed,
+                              pack_int4, unpack_int4)  # noqa: F401
+from repro.core.hessian import HessianState, init_hessian, accumulate, damped  # noqa: F401

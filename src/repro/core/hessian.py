@@ -1,0 +1,110 @@
+"""Calibration Hessian machinery (paper §3.2, eq. 9–14).
+
+The layer Hessian is the Gram matrix of the layer inputs accumulated over
+all calibration batches, ``H ≈ Σ_b X_b^T X_b`` (eq. 9), damped by
+``λ = percdamp · mean(diag H)`` (eq. 10).
+
+`HessianState` supports streaming accumulation (one batch at a time — the
+single-instance paradigm keeps only the *last* batch's activations, the
+Hessian itself is a fixed (Cin, Cin) buffer) and cross-data-shard reduction
+(psum) for distributed calibration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class HessianState(NamedTuple):
+    H: jax.Array          # (in, in) float32 Gram accumulator
+    count: jax.Array      # scalar int32: total rows (tokens) accumulated
+
+
+def init_hessian(in_dim: int) -> HessianState:
+    return HessianState(jnp.zeros((in_dim, in_dim), jnp.float32),
+                        jnp.zeros((), jnp.int32))
+
+
+@jax.jit
+def accumulate(state: HessianState, x: jax.Array) -> HessianState:
+    """Add one calibration batch. x: (..., in) — leading dims flattened."""
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    H = state.H + kops.hessian_accum(x2)
+    return HessianState(H, state.count + x2.shape[0])
+
+
+def damped(state: HessianState, percdamp: float) -> jax.Array:
+    """eq. 10: H̃ = H + percdamp·mean(diag H)·I  (also rescues dead columns)."""
+    H = state.H
+    diag = jnp.diag(H)
+    lam = percdamp * jnp.mean(diag)
+    # GPTQ convention: columns with zero activation get diag forced to 1 so
+    # the Cholesky stays well-posed; the corresponding weights quantize RTN.
+    dead = diag <= 0.0
+    H = H + jnp.where(dead, 1.0, 0.0) * jnp.eye(H.shape[0], dtype=H.dtype)
+    return H + lam * jnp.eye(H.shape[0], dtype=H.dtype)
+
+
+@jax.jit
+def cholesky_inverse_upper(Hd: jax.Array) -> jax.Array:
+    """GPTQ's ``Hinv``: upper Cholesky factor of H̃^{-1}.
+
+    torch reference::
+        Hinv = cholesky(cholesky_inverse(cholesky(H)), upper=True)
+
+    We compute H^{-1} via a Cholesky solve then factor it. fp64 would be
+    nicer but TPUs are fp32; percdamp keeps this stable in practice.
+    """
+    n = Hd.shape[0]
+    L = jnp.linalg.cholesky(Hd)
+    Hinv = jax.scipy.linalg.cho_solve((L, True), jnp.eye(n, dtype=Hd.dtype))
+    # upper factor: cholesky returns lower L' with Hinv = L'L'^T; we need
+    # U with Hinv = U^T U?  torch's upper=True returns U s.t. Hinv = U^T U
+    # ... actually torch.cholesky(A, upper=True) returns U with A = U^T U.
+    Lu = jnp.linalg.cholesky(Hinv)          # Hinv = Lu Lu^T
+    return Lu.T                             # U = Lu^T  => Hinv = U^T U
+
+
+def block_solver(Hd: jax.Array, c1: int, c2: int):
+    """Return a solve(rhs) for the damped Hessian block H̃[c1:c2, c1:c2].
+
+    eq. 12–14: stage 2 uses the *global* Hessian's block diagonal as the
+    instantaneous curvature, pre-factored once per block.
+    """
+    Hb = Hd[c1:c2, c1:c2]
+    L = jnp.linalg.cholesky(Hb)
+
+    def solve(rhs: jax.Array) -> jax.Array:
+        return jax.scipy.linalg.cho_solve((L, True), rhs)
+
+    return solve
+
+
+def gram_solver(Xb: jax.Array, damp_rel: float = 1e-6):
+    """Solve with (X_i^T X_i + εI) — the paper's eq. 6 literal variant.
+
+    Used when ``rpiq_use_global_hessian=False``; with a single calibration
+    batch the Gram matrix can be singular, so a small relative damping is
+    always applied.
+    """
+    G = Xb.T @ Xb
+    lam = damp_rel * jnp.mean(jnp.diag(G)) + 1e-12
+    L = jnp.linalg.cholesky(G + lam * jnp.eye(G.shape[0], dtype=G.dtype))
+
+    def solve(rhs: jax.Array) -> jax.Array:
+        return jax.scipy.linalg.cho_solve((L, True), rhs)
+
+    return solve
+
+
+# -- distributed reduction ---------------------------------------------------
+
+def psum_hessian(state: HessianState, axis_name: str) -> HessianState:
+    """Reduce partial Hessians across a mesh axis (inside shard_map)."""
+    return HessianState(jax.lax.psum(state.H, axis_name),
+                        jax.lax.psum(state.count, axis_name))

@@ -1,0 +1,501 @@
+"""The RPIQ model-quantization pipeline (the paper's end-to-end procedure).
+
+Sequential layer-wise calibration, exactly as GPTQ/AutoGPTQ practice it and
+the paper assumes:
+
+  1. embed every calibration batch → residual streams ``hs``;
+  2. for each transformer layer (eagerly, segment-element by element):
+     a. **capture** — run the layer over all batches with a :class:`Tap`
+        that streams each named linear's inputs into its Hessian
+        (eq. 9, ``H += X_bᵀX_b``) and keeps only the **last** batch's
+        inputs resident (single-instance paradigm, eq. 11);
+     b. **stage 1** — GPTQ per linear from the damped Hessian (eq. 10);
+     c. **stage 2** — RPIQ refinement per linear from
+        ``(X_last, W_fp, H̃)`` (eq. 4–8, 12–14, 19–23);
+     d. **replace** the layer's weights with the refined on-grid values and
+        re-run the layer to **propagate quantized activations** to the next
+        layer (so later Hessians see the quantized network — GPTQ
+        semantics);
+  3. MoE layers: the router/shared-expert linears tap normally; routed
+     expert FFNs get **per-expert Hessians from their routed tokens** via
+     ``moe.dispatch`` (capacity-padded zero rows contribute nothing to
+     ``XᵀX``); experts that saw fewer than one group of tokens fall back
+     to RTN on their own grid (recorded in the report).
+
+Returns float params whose quantized linears hold *on-grid* values plus a
+``QuantReport`` (per-linear Γ histories = paper Table 5 / Fig. 5) and a
+packer to int4 serving artifacts (QuantizedTensor leaves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import Config, QuantConfig
+from repro.core import hessian as hess
+from repro.core.gptq import gptq_quantize, rtn_quantize
+from repro.core.quant import QuantizedTensor, pack_int4
+from repro.core.rpiq import rpiq_refine
+from repro.kernels import ops as kops
+from repro.models import transformer as T
+from repro.models import moe as moe_mod
+from repro.models.linear import Tap
+from repro.models.layers import embed, norm, sinusoidal_positions
+
+
+@dataclasses.dataclass
+class LinearRecord:
+    name: str
+    shape: Tuple[int, int]           # (out, in)
+    gptq_err: float
+    gamma: List[float]               # Γ trajectory (Γ[0] = post-stage-1)
+    gamma_final: float
+    iters: int
+    mode: str                        # "rpiq" | "rtn-fallback" | "skipped"
+    seconds: float
+
+
+@dataclasses.dataclass
+class QuantReport:
+    linears: List[LinearRecord] = dataclasses.field(default_factory=list)
+    seconds_total: float = 0.0
+    seconds_stage1: float = 0.0
+    seconds_stage2: float = 0.0
+    peak_resident_bytes: int = 0     # analytic single-instance residency
+
+    def summary(self) -> str:
+        n = len(self.linears)
+        improved = sum(1 for l in self.linears
+                       if l.gamma and l.gamma_final < l.gamma[0] * 0.999)
+        return (f"{n} linears quantized; stage2 improved {improved}; "
+                f"t={self.seconds_total:.1f}s "
+                f"(s1={self.seconds_stage1:.1f} s2={self.seconds_stage2:.1f})")
+
+
+def _resolve(tree: Dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        node = node[part]
+    return node
+
+
+def _quantize_linear(qc: QuantConfig, w_io: jax.Array,
+                     hstate: hess.HessianState, x_last: jax.Array,
+                     report: QuantReport, name: str,
+                     rpiq_enabled: bool = True,
+                     x_count: Optional[jax.Array] = None):
+    """Quantize one linear. w_io: (in, out) model weight.
+
+    Returns (w_io_quantized, (scales, zeros) | None) — the grid is carried
+    in the param tree so packing round-trips exactly.
+    """
+    t0 = time.perf_counter()
+    w_oi = jnp.asarray(w_io, jnp.float32).T
+    in_dim = w_oi.shape[1]
+    if in_dim % qc.blocksize != 0 or in_dim % qc.group_size != 0:
+        report.linears.append(LinearRecord(
+            name, tuple(w_oi.shape), 0.0, [], 0.0, 0, "skipped",
+            time.perf_counter() - t0))
+        return w_io, None
+    Hd = hess.damped(hstate, qc.percdamp)
+    u = hess.cholesky_inverse_upper(Hd)
+    res1 = gptq_quantize(w_oi, u, bits=qc.bits, group_size=qc.group_size,
+                         blocksize=qc.blocksize, symmetric=qc.symmetric)
+    t1 = time.perf_counter()
+    report.seconds_stage1 += t1 - t0
+    grid = (res1.scales, res1.zeros)
+    if not rpiq_enabled or qc.rpiq_iters <= 0:
+        report.linears.append(LinearRecord(
+            name, tuple(w_oi.shape), float(res1.err), [], 0.0, 0, "gptq",
+            t1 - t0))
+        return res1.w_q.T.astype(w_io.dtype), grid
+    x2 = x_last.reshape(-1, in_dim)
+    res2 = rpiq_refine(res1.w_q, w_oi, x2, Hd, res1.scales, res1.zeros,
+                       h_count=hstate.count, x_count=x_count, bits=qc.bits,
+                       group_size=qc.group_size, block_size=qc.blocksize,
+                       alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
+                       early_stop=qc.rpiq_early_stop,
+                       exact_gram=not qc.rpiq_use_global_hessian)
+    t2 = time.perf_counter()
+    report.seconds_stage2 += t2 - t1
+    gam = [float(g) for g in np.asarray(res2.loss_history)
+           if np.isfinite(g)]
+    report.linears.append(LinearRecord(
+        name, tuple(w_oi.shape), float(res1.err), gam,
+        float(res2.proj_loss), int(res2.iters_run), "rpiq", t2 - t0))
+    return res2.w_q.T.astype(w_io.dtype), grid
+
+
+def _quantize_moe_experts(cfg: Config, p_moe: Dict, xs: List[jax.Array],
+                          mc, report: QuantReport, name: str) -> Dict:
+    """Per-expert Hessians from routed tokens (paper's method per expert).
+
+    ``xs``: per-calibration-batch flat MoE block inputs (T, d), collected
+    from the router tap.
+    """
+    qc = cfg.quant
+    m = mc.moe
+    e = m.num_experts
+    d, f = p_moe["w_gate"].shape[1:]
+    # stream dispatch over batches: per-expert Hessians for gate/up (input d)
+    # and for down (input f, needs the expert mid activations).
+    H_in = [hess.init_hessian(d) for _ in range(e)]
+    H_mid = [hess.init_hessian(f) for _ in range(e)]
+    real_counts = np.zeros(e, np.int64)
+    x_last_in: Optional[jax.Array] = None
+    x_last_mid: Optional[jax.Array] = None
+    for bi, xt in enumerate(xs):
+        dsp = moe_mod.dispatch(mc, p_moe, xt.astype(jnp.dtype(mc.dtype)))
+        buf = dsp.buf                                   # (E, C, d)
+        g = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                       p_moe["w_gate"].astype(jnp.float32))
+        u = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                       p_moe["w_up"].astype(jnp.float32))
+        from repro.models.layers import _act
+        mid = _act(mc.act, g) * u                       # (E, C, f)
+        real_counts += np.asarray(dsp.counts, np.int64)
+        for ei in range(e):
+            H_in[ei] = hess.accumulate(H_in[ei], buf[ei])
+            H_mid[ei] = hess.accumulate(H_mid[ei], mid[ei])
+        if bi == len(xs) - 1:
+            x_last_in, x_last_mid = buf, mid
+
+    # zero-padded capacity rows contribute nothing to XᵀX; use real routed
+    # token counts for both the starvation check and the eq.-13 rescale.
+    H_in = [hess.HessianState(h.H, jnp.asarray(int(c), jnp.int32))
+            for h, c in zip(H_in, real_counts)]
+    H_mid = [hess.HessianState(h.H, jnp.asarray(int(c), jnp.int32))
+             for h, c in zip(H_mid, real_counts)]
+
+    new = dict(p_moe)
+    for wname, Hs, xl in (
+            ("w_gate", H_in, x_last_in),
+            ("w_up", H_in, x_last_in),
+            ("w_down", H_mid, x_last_mid)):
+        stacked, grids = [], []
+        for ei in range(e):
+            w_e = p_moe[wname][ei]                      # (in, out)
+            n_tok = int(Hs[ei].count)
+            if n_tok < qc.group_size:
+                # starved expert: RTN fallback on its own grid
+                gsz = (qc.group_size
+                       if w_e.shape[0] % qc.group_size == 0
+                       else w_e.shape[0])
+                res = rtn_quantize(jnp.asarray(w_e, jnp.float32).T,
+                                   bits=qc.bits, group_size=gsz)
+                stacked.append(res.w_q.T.astype(p_moe[wname].dtype))
+                grids.append((res.scales, res.zeros) if gsz ==
+                             qc.group_size else None)
+                report.linears.append(LinearRecord(
+                    f"{name}.{wname}[{ei}]", tuple(w_e.shape[::-1]),
+                    0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+            else:
+                w_q, grid = _quantize_linear(
+                    qc, w_e, Hs[ei], xl[ei], report,
+                    f"{name}.{wname}[{ei}]",
+                    x_count=dsp.counts[ei].astype(jnp.int32))
+                stacked.append(w_q)
+                grids.append(grid)
+        new[wname] = jnp.stack(stacked)
+        if all(g is not None for g in grids):
+            new[f"{wname}_qscales"] = jnp.stack([g[0] for g in grids])
+            new[f"{wname}_qzeros"] = jnp.stack([g[1] for g in grids])
+    return new
+
+
+def _linear_names_in(tree: Dict, prefix: str = "") -> List[str]:
+    """Dotted paths of {w:...} dense params inside a layer subtree."""
+    out = []
+    for k, v in tree.items():
+        path = f"{prefix}.{k}" if prefix else k
+        if isinstance(v, dict):
+            if "w" in v and not isinstance(v["w"], dict) \
+                    and getattr(v["w"], "ndim", 0) == 2:
+                out.append(path)
+            else:
+                out.extend(_linear_names_in(v, path))
+    return out
+
+
+_QUANT_SUBTREES = ("mixer", "mlp", "xattn")   # norms/embeds stay fp
+
+
+def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
+                   apply_fn, report: QuantReport) -> Tuple[Dict, List]:
+    """Quantize one layer's linears, then propagate quantized outputs.
+
+    ``apply_fn(params, h, batch_index) -> h_out`` runs the layer eagerly.
+    Returns (new_layer_params, new_hs).
+    """
+    qc = cfg.quant
+    mc = cfg.model
+    is_moe = "mlp" in layer_params and "w_gate" in layer_params.get("mlp", {})
+    # 1. capture: stream Hessians, keep last batch inputs
+    hessians: Dict[str, hess.HessianState] = {}
+    last_x: Dict[str, jax.Array] = {}
+    moe_xs: List[jax.Array] = []     # per-batch MoE block inputs (router tap)
+
+    targets = set()
+    for sub in _QUANT_SUBTREES:
+        if sub in layer_params:
+            targets.update(f"{sub}.{n}" if n else sub
+                           for n in _linear_names_in(layer_params[sub]))
+    # the router stays full-precision (standard MoE-PTQ practice; its tap is
+    # only used to collect the block inputs for the per-expert Hessians)
+    targets.discard("mlp.router")
+
+    def on_record(name: str, x: jax.Array):
+        if name == "mlp.router":
+            moe_xs.append(x.reshape(-1, x.shape[-1]))
+            return
+        if name not in targets:
+            return
+        x2 = x.reshape(-1, x.shape[-1])
+        if name not in hessians:
+            hessians[name] = hess.init_hessian(x2.shape[1])
+        hessians[name] = hess.accumulate(hessians[name], x2)
+        last_x[name] = x2        # overwritten per batch → last batch stays
+
+    for bi, h in enumerate(hs):
+        with Tap(on_record=on_record):
+            apply_fn(layer_params, h, bi)
+
+    # 2/3. quantize each captured linear (stage 1 + stage 2)
+    new_params = jax.tree_util.tree_map(lambda x: x, layer_params)
+    for name in sorted(hessians.keys()):
+        node = _resolve(new_params, name)
+        node["w"], grid = _quantize_linear(qc, node["w"], hessians[name],
+                                           last_x[name], report, name)
+        if grid is not None:
+            # stage-1 grid travels with the weight → exact int4 packing
+            node["qscales"], node["qzeros"] = grid
+
+    # MoE routed experts (stacked einsums, not dense() taps)
+    if is_moe:
+        assert len(moe_xs) == len(hs), "router tap missed batches"
+        new_params["mlp"] = _quantize_moe_experts(
+            cfg, new_params["mlp"], moe_xs, mc, report, "mlp")
+
+    # 4. propagate quantized activations
+    new_hs = [apply_fn(new_params, h, bi) for bi, h in enumerate(hs)]
+    return new_params, new_hs
+
+
+def quantize_model(cfg: Config, params: Dict,
+                   calib: List[Dict[str, jax.Array]],
+                   verbose: bool = False) -> Tuple[Dict, QuantReport]:
+    """Quantize every transformer layer of a decoder-only or enc-dec model.
+
+    ``calib``: list of batch dicts ({tokens, embeds?/frames?}); the last one
+    is the single instance for stage 2.
+    """
+    t_start = time.perf_counter()
+    mc = cfg.model
+    report = QuantReport()
+    dtype = jnp.dtype(mc.dtype)
+
+    if mc.is_encoder_decoder:
+        out = _quantize_encdec(cfg, params, calib, report, verbose)
+    else:
+        out = _quantize_decoder_only(cfg, params, calib, report, verbose)
+    report.seconds_total = time.perf_counter() - t_start
+    return out, report
+
+
+def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
+                           verbose: bool) -> Dict:
+    mc = cfg.model
+    dtype = jnp.dtype(mc.dtype)
+    hs = []
+    for b in calib:
+        h = embed(params["embed"], b["tokens"], dtype)
+        if b.get("embeds") is not None:
+            h = jnp.concatenate([b["embeds"].astype(dtype), h], axis=1)
+        hs.append(h)
+    seqs = [h.shape[1] for h in hs]
+    assert len(set(seqs)) == 1, "calibration batches must share seq_len"
+    b0, s0, _ = hs[0].shape
+    positions = jnp.arange(s0, dtype=jnp.int32)[None, :].repeat(b0, 0)
+
+    new_blocks = []
+    specs_per_seg = T.segments(mc)
+    li = 0
+    for seg, seg_params in zip(specs_per_seg, params["blocks"]):
+        elems = []
+        for c in range(seg.count):
+            elem = T._seg_take(seg_params, c)
+            new_elem = {}
+            for s_i, spec in enumerate(seg.specs):
+                lp = elem[f"sub{s_i}"]
+
+                def apply_fn(p, h, bi, _spec=spec):
+                    out, _ = T.layer_forward(mc, _spec, p, h, positions)
+                    return out
+
+                lp_new, hs = quantize_layer(cfg, lp, hs, apply_fn, report)
+                new_elem[f"sub{s_i}"] = lp_new
+                li += 1
+                if verbose:
+                    last = report.linears[-1] if report.linears else None
+                    print(f"  layer {li}: {report.summary()}")
+            elems.append(new_elem)
+        new_blocks.append(T._stack_trees(elems))
+    out = dict(params)
+    out["blocks"] = new_blocks
+    return out
+
+
+def _quantize_encdec(cfg: Config, params: Dict, calib, report,
+                     verbose: bool) -> Dict:
+    mc = cfg.model
+    dtype = jnp.dtype(mc.dtype)
+    # ----- encoder -----
+    hs = []
+    for b in calib:
+        fr = b["frames"].astype(dtype)
+        hs.append(fr + sinusoidal_positions(fr.shape[1], mc.d_model
+                                            )[None].astype(dtype))
+    se = hs[0].shape[1]
+    b0 = hs[0].shape[0]
+    enc_pos = jnp.arange(se, dtype=jnp.int32)[None, :].repeat(b0, 0)
+
+    n_enc = jax.tree_util.tree_leaves(
+        params["encoder"]["layers"])[0].shape[0]
+    enc_elems = []
+    for i in range(n_enc):
+        lp = T._seg_take(params["encoder"]["layers"], i)
+
+        def enc_apply(p, h, bi):
+            hn = norm(mc, p["norm1"], h)
+            from repro.models import attention as attn
+            y = attn.attention_forward(mc, p["mixer"], hn, enc_pos,
+                                       causal=False, use_rope=False,
+                                       name="mixer")
+            h = h + y
+            hn = norm(mc, p["norm2"], h)
+            from repro.models.layers import mlp as mlp_fn
+            return h + mlp_fn(mc, p["mlp"], hn, name="mlp")
+
+        lp_new, hs = quantize_layer(cfg, lp, hs, enc_apply, report)
+        enc_elems.append(lp_new)
+    enc_out = [norm(mc, params["encoder"]["final_norm"], h) for h in hs]
+
+    # ----- decoder -----
+    dhs = []
+    for b in calib:
+        tk = b["tokens"]
+        h = embed(params["embed"], tk, dtype)
+        dhs.append(h + sinusoidal_positions(tk.shape[1], mc.d_model
+                                            )[None].astype(dtype))
+    sd = dhs[0].shape[1]
+    dec_pos = jnp.arange(sd, dtype=jnp.int32)[None, :].repeat(b0, 0)
+
+    n_dec = jax.tree_util.tree_leaves(
+        params["decoder"]["layers"])[0].shape[0]
+    dec_elems = []
+    for i in range(n_dec):
+        lp = T._seg_take(params["decoder"]["layers"], i)
+
+        def dec_apply(p, h, bi):
+            from repro.models import attention as attn
+            from repro.models.layers import mlp as mlp_fn
+            llp = p["layer"]
+            hn = norm(mc, llp["norm1"], h)
+            y = attn.attention_forward(mc, llp["mixer"], hn, dec_pos,
+                                       causal=True, use_rope=False,
+                                       name="layer.mixer")
+            h = h + y
+            hn = norm(mc, p["xnorm"], h)
+            kv = attn.cross_attention_kv(mc, p["xattn"], enc_out[bi],
+                                         "xattn")
+            h = h + attn.cross_attention(mc, p["xattn"], hn, kv, "xattn")
+            hn = norm(mc, llp["norm2"], h)
+            return h + mlp_fn(mc, llp["mlp"], hn, name="layer.mlp")
+
+        lp_new, dhs = quantize_layer(cfg, lp, dhs, dec_apply, report)
+        dec_elems.append(lp_new)
+
+    out = dict(params)
+    out["encoder"] = {"layers": T._stack_trees(enc_elems),
+                      "final_norm": params["encoder"]["final_norm"]}
+    out["decoder"] = {"layers": T._stack_trees(dec_elems),
+                      "final_norm": params["decoder"]["final_norm"]}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Packing to serving artifacts
+# ---------------------------------------------------------------------------
+
+def pack_for_serving(cfg: Config, params_q: Dict) -> Dict:
+    """Replace quantized-linear float weights with int4 QuantizedTensor.
+
+    Weights are re-gridded with fresh (scale, zero) per group — the values
+    are already on a 4-bit grid from the pipeline, so this round-trips
+    exactly (asserted in tests). Norms/embeddings stay fp.
+    """
+    qc = cfg.quant
+
+    from repro.core.quant import QuantParams, compute_qparams, quantize_codes
+
+    def pack_generic(w: jax.Array, scales=None,
+                     zeros=None) -> QuantizedTensor:
+        """(..., in, out) float → (..., out, in//2)-packed QuantizedTensor.
+
+        Leading dims cover scan-stacked layers and/or the expert axis; the
+        math is fully vectorized (no per-expert Python loops — deepseek has
+        58×256 expert matrices). When the pipeline carried the stage-1 grid
+        (qscales/qzeros), packing on it round-trips the refined weights
+        EXACTLY; otherwise the grid is recomputed (lossy only for weights
+        not already on a grid, e.g. fp checkpoints packed directly).
+        """
+        w_oi = jnp.swapaxes(jnp.asarray(w, jnp.float32), -1, -2)
+        lead = w_oi.shape[:-2]
+        o, i = w_oi.shape[-2:]
+        g = i // qc.group_size
+        w2 = w_oi.reshape(-1, i)
+        if scales is not None:
+            qp = QuantParams(jnp.asarray(scales, jnp.float32)
+                             .reshape(-1, g),
+                             jnp.asarray(zeros, jnp.float32).reshape(-1, g))
+        else:
+            qp = compute_qparams(w2, qc.bits, qc.group_size)
+        codes = quantize_codes(w2, qp, qc.bits, qc.group_size)
+        packed = pack_int4(codes).reshape(*lead, o, i // 2)
+        return QuantizedTensor(packed,
+                               qp.scales.reshape(*lead, o, g),
+                               qp.zeros.reshape(*lead, o, g),
+                               (*lead, o, i), qc.bits, qc.group_size)
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                sub = f"{path}.{k}"
+                if k in ("qscales", "qzeros") or k.endswith("_qscales") \
+                        or k.endswith("_qzeros"):
+                    continue                      # consumed by the packer
+                if (k == "w" and getattr(v, "ndim", 0) >= 2
+                        and any(s in path for s in _QUANT_SUBTREES)
+                        and v.shape[-2] % qc.group_size == 0
+                        and "router" not in path):
+                    out[k] = pack_generic(v, tree.get("qscales"),
+                                          tree.get("qzeros"))
+                elif (k in ("w_gate", "w_up", "w_down")
+                      and getattr(v, "ndim", 0) >= 3
+                      and v.shape[-2] % qc.group_size == 0):
+                    out[k] = pack_generic(v, tree.get(f"{k}_qscales"),
+                                          tree.get(f"{k}_qzeros"))
+                else:
+                    out[k] = walk(v, sub)
+            return out
+        if isinstance(tree, list):
+            return [walk(v, path) for v in tree]
+        return tree
+
+    return walk(params_q)

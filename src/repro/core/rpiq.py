@@ -1,0 +1,212 @@
+"""RPIQ stage-2: residual-projected multi-collaborative closed-loop refinement.
+
+Paper §3.1–3.3 (eq. 2–8, 12–14, 19–23), per linear layer ``Y = X W^T``:
+
+  - global output residual ``D = Y_orig − Y_q`` (eq. 2) kept explicit;
+  - per column-block ``i``: *directed* residual
+    ``D_i = Y_orig − (Y_q − Y_{q,i})`` (eq. 4/20) — the global residual with
+    the current block's stale contribution removed;
+  - local least squares ``min ‖D_i − X_i B_i^T‖²`` solved with the *global*
+    damped Hessian's block diagonal as instantaneous curvature,
+    ``B_i* = H_i^{-1} X_i^T D_i`` (eq. 6/13/14) — single-instance paradigm:
+    the only data this stage touches is the last calibration batch
+    ``(X_last, Y_orig)`` (eq. 11) plus the stage-1 Hessian;
+  - projection onto the stage-1 quantization grid ``B̃_i = Q(B_i*)`` (eq. 7);
+  - damped update ``B_i ← B_i + α (B̃_i − B_i)`` (eq. 8);
+  - **Gauss–Seidel**: the running output ``Y_q`` is updated immediately after
+    each block (eq. 21–22), so block ``i+1`` sees blocks ``1..i`` of the
+    *current* round (eq. 19 mixed state);
+  - loss ``Γ^(t) = ‖Y_orig − Y_q^(t)‖²`` (eq. 23), early stop when it stops
+    decreasing or ``T_max`` reached; best projected weights retained.
+
+Notes recorded for EXPERIMENTS.md:
+  * eq. 8 keeps a **continuous** iterate (a convex combination of grid points
+    is generally off-grid). The deployable artifact must live on the int4
+    grid, so we track ``Q(B^{(t)})`` alongside and keep the best projected
+    candidate by projected loss (``keep_best_projection``). With the paper's
+    α = 0.01 the projection usually stays at the stage-1 solution for the
+    first iterations; larger α (≤1) trades stability for faster residual
+    decay — swept in benchmarks/table5_convergence.py.
+  * everything is row-parallel over ``Cout`` (see gptq.py) and jit-safe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantParams
+
+
+class RPIQResult(NamedTuple):
+    w_q: jax.Array          # (out, in) best *projected* weights (on-grid)
+    w_cont: jax.Array       # (out, in) final continuous iterate (eq. 8)
+    loss_history: jax.Array  # (T_max+1,) Γ per round; Γ[0] = stage-1 loss;
+    #                          padded with +inf after early stop
+    proj_loss: jax.Array    # scalar: Γ of the returned projected weights
+    iters_run: jax.Array    # scalar int32: rounds actually executed
+
+
+def _project_block(b: jax.Array, scales: jax.Array, zeros: jax.Array,
+                   bits: int, group_size: int) -> jax.Array:
+    """Q(·): project a (out, bs) block onto the fixed stage-1 grid.
+
+    scales/zeros: (out, bs // group_size) for this block's groups.
+    """
+    out_dim, bs = b.shape
+    qmax = 2.0 ** bits - 1.0
+    s = jnp.repeat(scales, group_size, axis=1)
+    z = jnp.repeat(zeros, group_size, axis=1)
+    q = jnp.clip(jnp.round(b / s) + z, 0.0, qmax)
+    return (q - z) * s
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "block_size", "t_max", "early_stop", "exact_gram"))
+def rpiq_refine(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
+                h_damped: jax.Array, scales: jax.Array, zeros: jax.Array, *,
+                h_count: jax.Array | None = None,
+                x_count: jax.Array | None = None,
+                bits: int = 4, group_size: int = 128, block_size: int = 128,
+                alpha: float = 0.01, t_max: int = 5,
+                early_stop: bool = True,
+                exact_gram: bool = False) -> RPIQResult:
+    """Stage-2 refinement for one linear layer.
+
+    w_init:   (out, in) stage-1 dequantized weights (on-grid)
+    w_fp:     (out, in) full-precision weights (defines Y_orig)
+    x_last:   (n, in)   last calibration batch inputs (single instance)
+    h_damped: (in, in)  stage-1 damped global Hessian H̃
+    scales/zeros: (out, in//group_size) stage-1 grid
+    h_count:  total samples accumulated into H̃. The paper's eq. 13
+        (``H_i^{-1} ≈ (X_i^T X_i)^{-1}``) holds only under consistent
+        per-sample normalization; H̃ sums over *all* calibration batches
+        while ``X_i^T D_i`` is single-instance, so we rescale
+        ``H_i ← H_i · n_last / h_count`` to make the least-squares solve
+        correctly scaled. Without this the LS step shrinks blocks by
+        ``n_last/n_total`` and Γ diverges for α near 1 (measured — see
+        EXPERIMENTS.md). ``None`` ⇒ H̃ is already single-instance scaled.
+    exact_gram: eq. 6 vs eq. 13–14. ``False`` (paper's single-instance
+        Hessian-curvature-reconstruction) uses the global H̃ block diagonals
+        as curvature — O(1) extra memory but an *approximation* of the
+        instance Gram whose eigenvalue error grows as ``sqrt(bs/n_last)``;
+        for α near 1 the Gauss–Seidel iteration matrix can then exceed unit
+        spectral radius and Γ diverges (measured). ``True`` implements eq. 6
+        literally: per-block Gram ``X_i^T X_i`` of the instance (lightly
+        damped), which makes each pre-projection update a true least-squares
+        descent step — stable at α = 1. Both modes keep the best projected
+        candidate, so the returned weights never regress either way.
+
+    ``block_size % group_size == 0`` required (grid aligned to blocks).
+    """
+    out_dim, in_dim = w_init.shape
+    assert in_dim % block_size == 0
+    assert block_size % group_size == 0
+    n_blocks = in_dim // block_size
+    gpb = block_size // group_size
+
+    x = x_last.astype(jnp.float32)              # (n, in)
+    w0 = w_init.astype(jnp.float32)
+    y_orig = x @ w_fp.astype(jnp.float32).T     # (n, out)
+
+    # per-block column slabs of X: (M, n, bs)
+    x_blocks = x.reshape(x.shape[0], n_blocks, block_size).transpose(1, 0, 2)
+
+    # --- pre-factor the blockwise curvature -------------------------------
+    if exact_gram:
+        # eq. 6 literal: G_i = X_i^T X_i (+ relative damping for rank safety)
+        grams = jnp.einsum("mnb,mnc->mbc", x_blocks, x_blocks)
+        diag_mean = jnp.mean(jnp.diagonal(grams, axis1=1, axis2=2),
+                             axis=1)             # (M,)
+        eye = jnp.eye(block_size, dtype=jnp.float32)
+        grams = grams + (1e-4 * diag_mean + 1e-8)[:, None, None] * eye
+        chol = jax.vmap(jnp.linalg.cholesky)(grams)
+    else:
+        # eq. 12–14: block diagonals of the (rescaled) global damped Hessian
+        if h_count is None:
+            h_scale = jnp.float32(1.0)
+        else:
+            n_x = (jnp.asarray(x.shape[0], jnp.float32) if x_count is None
+                   else x_count.astype(jnp.float32))
+            h_scale = n_x / jnp.maximum(h_count.astype(jnp.float32), 1.0)
+        idx = jnp.arange(n_blocks)
+        h4 = (h_damped * h_scale).reshape(n_blocks, block_size,
+                                          n_blocks, block_size)
+        h_blocks = h4[idx, :, idx, :]           # (M, bs, bs) block diagonals
+        chol = jax.vmap(jnp.linalg.cholesky)(h_blocks)
+    # per-block grid: (M, out, gpb)
+    s_blocks = scales.reshape(out_dim, n_blocks, gpb).transpose(1, 0, 2)
+    z_blocks = zeros.reshape(out_dim, n_blocks, gpb).transpose(1, 0, 2)
+
+    def block_outputs(w):
+        """Y_{q,i} = X_i B_i^T for all blocks: (M, n, out)."""
+        wb = w.reshape(out_dim, n_blocks, block_size).transpose(1, 0, 2)
+        return jnp.einsum("mnb,mob->mno", x_blocks, wb)
+
+    def loss_of(w):
+        y = x @ w.T
+        return jnp.sum((y_orig - y) ** 2)
+
+    gamma0 = loss_of(w0)
+
+    def _project_full(w):
+        s = jnp.repeat(scales, group_size, axis=1)
+        z = jnp.repeat(zeros, group_size, axis=1)
+        qmax = 2.0 ** bits - 1.0
+        q = jnp.clip(jnp.round(w / s) + z, 0.0, qmax)
+        return (q - z) * s
+
+    def gs_round(t, carry):
+        """One Gauss–Seidel sweep over all blocks (eq. 19–22)."""
+        w, y_q, best_w, best_loss, hist, done, iters = carry
+
+        def sweep_block(i, bc):
+            w, y_q = bc
+            c1 = i * block_size
+            b_old = jax.lax.dynamic_slice(w, (0, c1), (out_dim, block_size))
+            x_i = x_blocks[i]                               # (n, bs)
+            y_qi = x_i @ b_old.T                            # (n, out)
+            d_i = y_orig - (y_q - y_qi)                     # eq. 4/20
+            rhs = x_i.T @ d_i                               # (bs, out)
+            b_star = jax.scipy.linalg.cho_solve(
+                (chol[i], True), rhs).T                     # (out, bs) eq. 14
+            b_proj = _project_block(b_star, s_blocks[i], z_blocks[i],
+                                    bits, group_size)       # eq. 7
+            b_new = b_old + alpha * (b_proj - b_old)        # eq. 8
+            y_q = y_q - y_qi + x_i @ b_new.T                # eq. 21–22
+            w = jax.lax.dynamic_update_slice(w, b_new, (0, c1))
+            return w, y_q
+
+        def run(args):
+            w, y_q, best_w, best_loss, hist, iters = args
+            w, y_q = jax.lax.fori_loop(0, n_blocks, sweep_block, (w, y_q))
+            gamma = jnp.sum((y_orig - y_q) ** 2)            # eq. 23
+            hist = hist.at[t + 1].set(gamma)
+            # candidate: full projection of the continuous iterate
+            w_proj = _project_full(w)
+            ploss = loss_of(w_proj)
+            improve = ploss < best_loss
+            best_w = jnp.where(improve, w_proj, best_w)
+            best_loss = jnp.where(improve, ploss, best_loss)
+            # early stop: Γ stopped decreasing vs the previous round
+            stop = jnp.logical_and(
+                jnp.asarray(early_stop), gamma >= hist[t] * (1.0 - 1e-6))
+            return w, y_q, best_w, best_loss, hist, stop, iters + 1
+
+        def skip(args):
+            w, y_q, best_w, best_loss, hist, iters = args
+            return w, y_q, best_w, best_loss, hist, jnp.asarray(True), iters
+
+        w, y_q, best_w, best_loss, hist, done, iters = jax.lax.cond(
+            done, skip, run, (w, y_q, best_w, best_loss, hist, iters))
+        return w, y_q, best_w, best_loss, hist, done, iters
+
+    hist0 = jnp.full((t_max + 1,), jnp.inf, jnp.float32).at[0].set(gamma0)
+    y_q0 = x @ w0.T
+    carry = (w0, y_q0, w0, gamma0, hist0, jnp.asarray(False),
+             jnp.zeros((), jnp.int32))
+    w, y_q, best_w, best_loss, hist, done, iters = jax.lax.fori_loop(
+        0, t_max, gs_round, carry)
+    return RPIQResult(best_w, w, hist, best_loss, iters)

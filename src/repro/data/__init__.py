@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines (training + calibration)."""
+from repro.data.synthetic import (MarkovLM, SentimentTask, DataState,
+                                  calibration_batches)  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules, checkpointing, pipeline
+parallelism, gradient compression."""

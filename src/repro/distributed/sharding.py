@@ -1,0 +1,386 @@
+"""GSPMD sharding rules: params by path, activations by hint.
+
+Mesh axes (launch/mesh.py): ``("data", "model")`` single-pod,
+``("pod", "data", "model")`` multi-pod.
+
+Strategy (DESIGN.md §2):
+  - **DP** over ``pod`` × ``data`` — batch dims.
+  - **TP** over ``model`` — Megatron col/row parallel linears, expert
+    parallelism for stacked MoE weights, vocab-parallel embedding where the
+    vocab divides.
+  - **FSDP** over ``data`` — the non-TP weight dim (params gathered by XLA
+    per layer; optimizer state stays sharded). Within-pod only: cross-pod
+    param all-gathers would cross DCN every layer.
+  - **SP** (optional) — sequence dim of the residual stream over ``model``.
+
+Every rule is guarded by divisibility: a dim that doesn't divide by the
+mesh axis size stays unsharded (e.g. whisper's 51866 vocab, minicpm's 36
+heads). This keeps every (arch × mesh) cell lowerable; the roofline then
+shows what the fallback costs.
+
+``shard_hint(x, kind)`` is a no-op unless a :class:`Rules` context is
+active, so model code never depends on a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import Config, ParallelConfig
+
+_STATE = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# Activation hints
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Rules:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]            # ("pod","data") or ("data",)
+    tp_axis: Optional[str] = "model"
+    sp: bool = False                    # shard seq dim of residual over TP
+    ep_local_dispatch: bool = True      # shard_map MoE routing (§Perf B)
+
+    def axis_size(self, name: Optional[str]) -> int:
+        if name is None:
+            return 1
+        return int(self.mesh.shape[name])
+
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.dp_axes:
+            out *= self.axis_size(a)
+        return out
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def _guard(spec_entry, dim: int, rules: Rules):
+    """Drop a sharding axis when the dim doesn't divide it."""
+    if spec_entry is None:
+        return None
+    axes = spec_entry if isinstance(spec_entry, tuple) else (spec_entry,)
+    size = 1
+    for a in axes:
+        size *= rules.axis_size(a)
+    if size <= 1 or dim % size != 0:
+        return None
+    return spec_entry
+
+
+def shard_hint(x: jax.Array, kind: str) -> jax.Array:
+    """Constrain activation sharding. kinds: act (B,S,D), logits (B,S,V),
+    tokens (B,S), batch1 (B, ...)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    dp = tuple(rules.dp_axes) if rules.dp_axes else None
+    tp = rules.tp_axis
+    if kind == "act" and x.ndim == 3:
+        seq = tp if rules.sp else None
+        spec = P(_guard(dp, x.shape[0], rules),
+                 _guard(seq, x.shape[1], rules), None)
+    elif kind == "logits" and x.ndim >= 2:
+        spec = P(_guard(dp, x.shape[0], rules),
+                 *([None] * (x.ndim - 2)),
+                 _guard(tp, x.shape[-1], rules))
+    elif kind == "tokens":
+        spec = P(_guard(dp, x.shape[0], rules), *([None] * (x.ndim - 1)))
+    elif kind == "batch1":
+        spec = P(_guard(dp, x.shape[0], rules), *([None] * (x.ndim - 1)))
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by path
+# ---------------------------------------------------------------------------
+
+# (regex on '/'-joined path, spec template for the *trailing* dims)
+# templates use tokens: "tp" (model axis), "fsdp" (data axis), None.
+_PARAM_RULES: List[Tuple[str, Tuple]] = [
+    # embeddings / head
+    (r"embed/embedding$",              ("tp", "fsdp")),
+    (r"lm_head/w$",                    ("fsdp", "tp")),
+    # attention projections (col-parallel q/k/v, row-parallel o)
+    (r"(mixer|xattn)/(q|k|v)/w$",      ("fsdp", "tp")),
+    (r"(mixer|xattn)/o/w$",            ("tp", "fsdp")),
+    (r"(mixer|xattn)/(q|k|v)/b$",      ("tp",)),
+    (r"(mixer|xattn)/o/b$",            (None,)),
+    # MLA
+    (r"mixer/(q_down|kv_down|k_rope)/w$", ("fsdp", None)),
+    (r"mixer/(q_up|k_up|v_up)/w$",     ("fsdp", "tp")),
+    # gated MLP
+    (r"mlp/(gate|up)/w$",              ("fsdp", "tp")),
+    (r"mlp/down/w$",                   ("tp", "fsdp")),
+    (r"mlp/(gate|up)/b$",              ("tp",)),
+    (r"mlp/down/b$",                   (None,)),
+    # MoE (stacked experts, EP over model)
+    (r"mlp/router/w$",                 (None, None)),
+    (r"mlp/w_(gate|up)$",              ("tp", "fsdp", None)),
+    (r"mlp/w_down$",                   ("tp", None, "fsdp")),
+    (r"mlp/shared/(gate|up)/w$",       ("fsdp", "tp")),
+    (r"mlp/shared/down/w$",            ("tp", "fsdp")),
+    # mamba
+    (r"mixer/in/w$",                   ("fsdp", "tp")),
+    (r"mixer/x/w$",                    ("tp", None)),
+    (r"mixer/dt/w$",                   (None, "tp")),
+    (r"mixer/dt/b$",                   ("tp",)),
+    (r"mixer/out/w$",                  ("tp", "fsdp")),
+    (r"mixer/conv/w$",                 (None, "tp")),
+    (r"mixer/conv/b$",                 ("tp",)),
+    (r"mixer/a_log$",                  ("tp", None)),
+    (r"mixer/d_skip$",                 ("tp",)),
+    # rg-lru
+    (r"mixer/(gate)/w$",               ("fsdp", "tp")),
+    (r"mixer/(rg|ig)/w$",              (None, "tp")),
+    (r"mixer/(rg|ig)/b$",              ("tp",)),
+    (r"mixer/lambda$",                 ("tp",)),
+    # mtp
+    (r"mtp/proj/w$",                   ("fsdp", "tp")),
+    # --- int4-packed serving leaves (QuantizedTensor children /0 /1 /2,
+    # (out, in·)-major — col-parallel puts `out` on tp, row-parallel `in`) --
+    (r"(mixer|xattn)/(q|k|v|q_up|k_up|v_up)/w/\d$", ("tp", "fsdp")),
+    (r"(mixer|xattn)/o/w/\d$",         ("fsdp", "tp")),
+    (r"mixer/(q_down|kv_down|k_rope)/w/\d$", (None, "fsdp")),
+    (r"mlp/(gate|up)/w/\d$",           ("tp", "fsdp")),
+    (r"mlp/down/w/\d$",                ("fsdp", "tp")),
+    (r"mlp/shared/(gate|up)/w/\d$",    ("tp", "fsdp")),
+    (r"mlp/shared/down/w/\d$",         ("fsdp", "tp")),
+    (r"mlp/w_(gate|up|down)/\d$",      ("tp", None, "fsdp")),  # (E, out, in·)
+    (r"mixer/(in|gate|rg|ig)/w/\d$",   ("tp", "fsdp")),
+    (r"mixer/x/w/\d$",                 (None, "tp")),
+    (r"mixer/dt/w/\d$",                ("tp", None)),
+    (r"mixer/out/w/\d$",               ("fsdp", "tp")),
+    (r"lm_head/w/\d$",                 ("tp", "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _resolve(template: Tuple, shape: Tuple[int, ...],
+             rules: Rules) -> P:
+    """Template applies to trailing dims; leading (stack) dims get None."""
+    ndim = len(shape)
+    t = template[-ndim:] if len(template) >= ndim else template
+    lead = ndim - len(t)
+    entries: List = [None] * lead
+    for dim, tok in zip(shape[lead:], t):
+        if tok == "tp":
+            entries.append(_guard(rules.tp_axis, dim, rules))
+        elif tok == "fsdp":
+            entries.append(_guard("data", dim, rules)
+                           if rules_has_fsdp(rules) else None)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def rules_has_fsdp(rules: Rules) -> bool:
+    return getattr(rules, "fsdp", True) and "data" in rules.mesh.axis_names
+
+
+def param_pspecs(params: Any, rules: Rules, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree matching ``params`` (arrays or SDS)."""
+    rules.fsdp = fsdp  # type: ignore[attr-defined]
+
+    def assign(path, leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        s = _path_str(path)
+        for pat, template in _PARAM_RULES:
+            if re.search(pat, s):
+                return _resolve(template, shape, rules)
+        # default: replicate small leaves; fsdp-shard big 2D+ leaves
+        if fsdp and len(shape) >= 2:
+            ent = [None] * len(shape)
+            for i in range(len(shape) - 1, -1, -1):
+                if _guard("data", shape[i], rules) is not None:
+                    ent[i] = "data"
+                    break
+            return P(*ent)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(params: Any, rules: Rules, fsdp: bool = True) -> Any:
+    specs = param_pspecs(params, rules, fsdp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(caches: Any, rules: Rules) -> Any:
+    """KV/state caches: batch over DP, kv-heads over TP when divisible.
+
+    Layouts (with leading segment-stack axes of ndim-4/5):
+      k/v:   (..., B, S, KV, hd) → (None.., dp, None, tp, None)
+      ckv:   (..., B, S, rank)   → (None.., dp, None, None)
+      conv:  (..., B, K-1, C)    → (None.., dp, None, tp)
+      h:     (..., B, W[, n])    → (None.., dp, tp[, None])
+    """
+    dp = tuple(rules.dp_axes) if rules.dp_axes else None
+
+    def assign(path, leaf):
+        s = _path_str(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        ent: List = [None] * nd
+        if re.search(r"(^|/)(k|v)$", s) and nd >= 4:
+            b, sq, kv, hd = shape[-4:]
+            ent[-4] = _guard(dp, b, rules)
+            ent[-2] = _guard(rules.tp_axis, kv, rules)
+            if ent[-2] is None:
+                # kv heads don't divide TP (minicpm 36, whisper 20, MQA 1):
+                # shard the *sequence* dim instead — flash-decoding layout;
+                # softmax over the sharded axis costs one small all-reduce
+                # but cache reads drop 1/|tp| per chip (§Perf cell A it.2)
+                ent[-3] = _guard(rules.tp_axis, sq, rules)
+        elif re.search(r"(ckv|krope)$", s) and nd >= 3:
+            ent[-3] = _guard(dp, shape[-3], rules)
+        elif re.search(r"conv$", s) and nd >= 3:
+            ent[-3] = _guard(dp, shape[-3], rules)
+            ent[-1] = _guard(rules.tp_axis, shape[-1], rules)
+        elif re.search(r"(^|/)h$", s) and nd >= 2:
+            hdim = -2 if nd >= 3 and s.endswith("h") and shape[-1] <= 64 \
+                else -1
+            # mamba h: (B, d_inner, n); rglru h: (B, W)
+            if nd >= 3:
+                ent[-3] = _guard(dp, shape[-3], rules)
+                ent[-2] = _guard(rules.tp_axis, shape[-2], rules)
+            else:
+                ent[-2] = _guard(dp, shape[-2], rules)
+                ent[-1] = _guard(rules.tp_axis, shape[-1], rules)
+        elif nd >= 1:
+            ent[0] = None
+        return P(*ent)
+
+    return jax.tree_util.tree_map_with_path(assign, caches)
+
+
+def cache_shardings(caches: Any, rules: Rules) -> Any:
+    specs = cache_pspecs(caches, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_shardings(batch: Any, rules: Rules) -> Any:
+    dp = tuple(rules.dp_axes) if rules.dp_axes else None
+
+    def assign(leaf):
+        shape = tuple(leaf.shape)
+        ent: List = [None] * len(shape)
+        if shape:
+            ent[0] = _guard(dp, shape[0], rules)
+        return NamedSharding(rules.mesh, P(*ent))
+
+    return jax.tree_util.tree_map(assign, batch)
+
+
+def train_state_shardings(state: Any, rules: Rules,
+                          fsdp: bool = True) -> Any:
+    """NamedShardings for a TrainState (params + Adam moments + step).
+
+    f32 moments mirror the param specs (same shapes). int8 moments
+    (``Quantized8``: (n_blocks, 128) payload + (n_blocks,) scale) shard the
+    block dim over data when it divides.
+    """
+    from repro.training.train_step import TrainState
+    from repro.training.optimizer import AdamWState, Quantized8
+
+    pspecs = param_pspecs(state.params, rules, fsdp)
+
+    def moment_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        s = _path_str(path)
+        # Quantized8 children show up as trailing /q and /scale (NamedTuple)
+        if s.endswith("/q") or s.endswith("/scale") or len(shape) <= 1:
+            ent: List = [None] * len(shape)
+            if shape and fsdp:
+                ent[0] = _guard("data", shape[0], rules)
+            return P(*ent)
+        return None  # handled by mirroring below
+
+    def mirror(ps, leaf):
+        if isinstance(ps, P) and len(ps) == len(leaf.shape):
+            return ps
+        return P(*([None] * len(leaf.shape)))
+
+    is_q8 = lambda x: isinstance(x, Quantized8)
+    has_q8 = any(is_q8(l) for l in jax.tree_util.tree_leaves(
+        state.opt.m, is_leaf=is_q8))
+
+    if has_q8:
+        def q8_specs(tree):
+            return jax.tree_util.tree_map_with_path(
+                lambda p, l: moment_spec(p, l) or P(
+                    *([None] * len(l.shape))), tree)
+        m_specs = q8_specs(state.opt.m)
+        v_specs = q8_specs(state.opt.v)
+    else:
+        is_p = lambda x: isinstance(x, P)
+        m_specs = jax.tree_util.tree_map(mirror, pspecs, state.opt.m,
+                                         is_leaf=is_p)
+        v_specs = jax.tree_util.tree_map(mirror, pspecs, state.opt.v,
+                                         is_leaf=is_p)
+
+    specs = TrainState(pspecs,
+                       AdamWState(P(), m_specs, v_specs),
+                       P())
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def sds_with_shardings(tree: Any, shardings: Any) -> Any:
+    """ShapeDtypeStructs carrying NamedShardings (dry-run inputs)."""
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def make_rules(mesh: Mesh, parallel: Optional[ParallelConfig] = None
+               ) -> Rules:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    sp = bool(parallel.sp) if parallel is not None else False
+    epl = bool(parallel.ep_local_dispatch) if parallel is not None else True
+    return Rules(mesh=mesh, dp_axes=dp, tp_axis=tp, sp=sp,
+                 ep_local_dispatch=epl)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the RPIQ compute hot-spots.
+
+  - hessian_accum  — H = X^T X calibration Gram accumulation (paper eq. 9)
+  - w4a16_matmul   — int4-grouped dequant matmul (quantized serving path)
+  - quant_pack     — fused quantize-to-grid + nibble pack (stage-2 projection
+                     and deployment packing)
+
+``ops`` is the dispatch layer (pallas on TPU / interpret-validated on CPU /
+XLA fallback); ``ref`` holds the pure-jnp oracles used by the allclose tests.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: blocked Gram-matrix accumulation  H = X^T X.
+
+Calibration hot spot of GPTQ/RPIQ stage 1 (paper eq. 9). The GPU reference
+uses cuBLAS syrk on the full activation matrix; on TPU we tile the (d, d)
+output into (128, 128) VMEM blocks and accumulate rank-``bn`` updates on the
+MXU, streaming the token dimension through VMEM so arbitrarily long
+calibration batches never materialize in VMEM at once.
+
+Grid: (d/bi, d/bj, n/bn); the n-axis is the reduction (innermost, sequential
+on TPU), so the output block stays resident in VMEM across the accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_D = 128   # output tile edge — MXU-aligned
+DEFAULT_BLOCK_N = 512   # tokens per VMEM-resident slab
+
+
+def _hessian_kernel(xi_ref, xj_ref, h_ref, *, n_steps: int):
+    """One (bi, bj) output tile; accumulate over the token-grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)        # (bn, bi)
+    xj = xj_ref[...].astype(jnp.float32)        # (bn, bj)
+    h_ref[...] += jax.lax.dot_general(
+        xi, xj, (((0,), (0,)), ((), ())),       # contract token dim
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "interpret"))
+def hessian_accum_pallas(x: jax.Array, *, block_d: int = DEFAULT_BLOCK_D,
+                         block_n: int = DEFAULT_BLOCK_N,
+                         interpret: bool = True) -> jax.Array:
+    """H = X^T X. x: (n, d); n % block_n == 0 and d % block_d == 0
+    (ops.py pads otherwise). Returns (d, d) float32."""
+    n, d = x.shape
+    assert n % block_n == 0 and d % block_d == 0, (x.shape, block_n, block_d)
+    grid = (d // block_d, d // block_d, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_hessian_kernel, n_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(x, x)

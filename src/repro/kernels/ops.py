@@ -1,0 +1,151 @@
+"""Dispatch layer for the Pallas kernels.
+
+Every op has three implementations:
+  - ``*_pallas``  — the TPU kernel (interpret=True on CPU for validation),
+  - ``*_ref``     — the pure-jnp oracle in :mod:`repro.kernels.ref`,
+  - an XLA path (== ref) used for dry-run lowering and non-TPU backends.
+
+``impl`` selects: "auto" (pallas-interpret only when explicitly requested on
+CPU; real Mosaic lowering on TPU), "pallas", "xla". The CPU container always
+*validates* the kernels in interpret mode via tests; production dispatch
+defaults to XLA off-TPU so jit'd steps stay fast.
+
+Padding contracts: callers may pass any shapes; wrappers pad to tile
+multiples and slice back, so kernels keep hard divisibility asserts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.hessian_accum import hessian_accum_pallas
+from repro.kernels.quant_pack import quant_pack_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# H += X^T X
+# ---------------------------------------------------------------------------
+
+def hessian_accum(x: jax.Array, *, impl: str = "auto") -> jax.Array:
+    """Gram matrix X^T X with fp32 accumulation. x: (n, d)."""
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        return ref.hessian_accum_ref(x)
+    n, d = x.shape
+    block_n = 512 if n >= 512 else max(8, n)
+    block_d = 128 if d >= 128 else d
+    n_pad, d_pad = _round_up(n, block_n), _round_up(d, block_d)
+    if (n_pad, d_pad) != (n, d):
+        x = jnp.pad(x, ((0, n_pad - n), (0, d_pad - d)))
+    H = hessian_accum_pallas(x, block_d=block_d, block_n=block_n,
+                             interpret=not _on_tpu())
+    return H[:d, :d]
+
+
+# ---------------------------------------------------------------------------
+# y = x @ dequant(W)^T      (W packed int4, grouped scales/zeros)
+# ---------------------------------------------------------------------------
+
+def w4a16_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
+                 zeros: jax.Array, *, group_size: int = 128,
+                 impl: str = "auto") -> jax.Array:
+    """x: (..., k); packed: (n, k//2) u8; scales/zeros: (n, k//group_size)."""
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        lead = x.shape[:-1]
+        y = ref.w4a16_matmul_ref(x.reshape(-1, x.shape[-1]), packed,
+                                 scales, zeros, group_size)
+        return y.reshape(*lead, -1)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m, k = x2.shape
+    n = packed.shape[0]
+    block_m = 128 if m >= 128 else max(8, m)
+    block_n, block_k = 128, min(512, k)
+    m_pad, n_pad = _round_up(m, block_m), _round_up(n, block_n)
+    if m_pad != m:
+        x2 = jnp.pad(x2, ((0, m_pad - m), (0, 0)))
+    if n_pad != n:
+        packed = jnp.pad(packed, ((0, n_pad - n), (0, 0)))
+        scales = jnp.pad(scales, ((0, n_pad - n), (0, 0)),
+                         constant_values=1.0)
+        zeros = jnp.pad(zeros, ((0, n_pad - n), (0, 0)))
+    y = w4a16_matmul_pallas(x2, packed, scales, zeros, group_size=group_size,
+                            block_m=block_m, block_n=block_n, block_k=block_k,
+                            interpret=not _on_tpu())
+    return y[:m, :n].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# quantize-to-grid + pack nibbles
+# ---------------------------------------------------------------------------
+
+def quant_pack(w: jax.Array, scales: jax.Array, zeros: jax.Array, *,
+               group_size: int = 128, impl: str = "auto") -> jax.Array:
+    """w: (n, k) float → (n, k//2) uint8 codes on the (scales, zeros) grid."""
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        return ref.quant_pack_ref(w, scales, zeros, group_size)
+    n, k = w.shape
+    block_n = 256 if n >= 256 else max(8, n)
+    n_pad = _round_up(n, block_n)
+    if n_pad != n:
+        w = jnp.pad(w, ((0, n_pad - n), (0, 0)))
+        scales = jnp.pad(scales, ((0, n_pad - n), (0, 0)), constant_values=1.0)
+        zeros = jnp.pad(zeros, ((0, n_pad - n), (0, 0)))
+    out = quant_pack_pallas(w, scales, zeros, group_size=group_size,
+                            block_n=block_n, block_k=min(512, k),
+                            interpret=not _on_tpu())
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
+                   chunk: int = 256):
+    """Diagonal SSM scan. See kernels/selective_scan.py for shapes.
+
+    XLA fallback = chunked associative scan (materializes (B, chunk, d, n)
+    per chunk — the §Perf cell-C baseline); pallas path keeps the state in
+    VMEM (O(B·S·d) HBM traffic).
+    """
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        B, S, d = u.shape
+        bt = min(128, S)
+        s_pad = _round_up(S, bt)
+        if s_pad != S:
+            padw = ((0, 0), (0, s_pad - S), (0, 0))
+            u = jnp.pad(u, padw)
+            dt = jnp.pad(dt, padw)
+            bm = jnp.pad(bm, ((0, 0), (0, s_pad - S), (0, 0)))
+            cm = jnp.pad(cm, ((0, 0), (0, s_pad - S), (0, 0)))
+        y, h_last = selective_scan_pallas(u, dt, bm, cm, a_log, d_skip, h0,
+                                          block_d=min(256, d), block_t=bt,
+                                          interpret=not _on_tpu())
+        # h_last after padded steps: padded dt=0 ⇒ a=1, b=0 ⇒ h unchanged
+        return y[:, :S], h_last
+    # XLA fallback: chunked diagonal recurrence (baseline memory behavior)
+    from repro.models.recurrent import _chunked_recurrence
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])
+    b = (dt.astype(jnp.float32) * u.astype(jnp.float32))[..., None] \
+        * bm.astype(jnp.float32)[:, :, None, :]
+    h, h_last = _chunked_recurrence(a, b, h0.astype(jnp.float32), chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h, cm.astype(jnp.float32))
+    y = y + u.astype(jnp.float32) * d_skip.astype(jnp.float32)
+    return y.astype(u.dtype), h_last.astype(h0.dtype)
+
+
+__all__ = ["hessian_accum", "w4a16_matmul", "quant_pack", "selective_scan"]

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose tests and the XLA
+fallback implementations used on non-TPU backends (e.g. the CPU dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hessian_accum_ref(x: jax.Array) -> jax.Array:
+    """H = X^T X with fp32 accumulation. x: (n, d) any float dtype."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf
+
+
+def w4a16_matmul_ref(x: jax.Array, packed: jax.Array, scales: jax.Array,
+                     zeros: jax.Array, group_size: int) -> jax.Array:
+    """y = x @ dequant(W)^T.
+
+    x:      (m, k) float (bf16/f32)
+    packed: (n, k//2) uint8 — two 4-bit codes per byte, low nibble = even col
+    scales: (n, k//group_size) f32
+    zeros:  (n, k//group_size) f32 (integer-valued)
+    returns (m, n) in x.dtype, fp32 accumulation.
+    """
+    n, kh = packed.shape
+    k = kh * 2
+    lo = (packed & jnp.uint8(0x0F)).astype(jnp.float32)
+    hi = ((packed >> 4) & jnp.uint8(0x0F)).astype(jnp.float32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(n, k)
+    s = jnp.repeat(scales.astype(jnp.float32), group_size, axis=1)
+    z = jnp.repeat(zeros.astype(jnp.float32), group_size, axis=1)
+    w = (codes - z) * s                                   # (n, k) f32
+    y = jnp.dot(x.astype(jnp.float32), w.T,
+                preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def selective_scan_ref(u: jax.Array, dt: jax.Array, bm: jax.Array,
+                       cm: jax.Array, a_log: jax.Array, d_skip: jax.Array,
+                       h0: jax.Array):
+    """Mamba-1 diagonal SSM, sequential scan oracle.
+
+    u/dt: (B, S, d); bm/cm: (B, S, n); a_log: (d, n) (A = -exp(a_log));
+    d_skip: (d,); h0: (B, d, n). Returns (y (B,S,d) in u.dtype, h_last).
+    """
+    A = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs                    # (B,d),(B,d),(B,n),(B,n)
+        a_t = jnp.exp(dt_t[..., None] * A[None])    # (B, d, n)
+        h = a_t * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t) \
+            + u_t * d_skip.astype(jnp.float32)[None]
+        return h, y_t
+
+    xs = (u.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          bm.astype(jnp.float32).transpose(1, 0, 2),
+          cm.astype(jnp.float32).transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(u.dtype), h_last.astype(h0.dtype)
+
+
+def quant_pack_ref(w: jax.Array, scales: jax.Array, zeros: jax.Array,
+                   group_size: int) -> jax.Array:
+    """Quantize to 4-bit codes on a fixed grid and pack 2 codes/byte.
+
+    w: (n, k); scales/zeros: (n, k//group_size). Returns (n, k//2) uint8.
+    """
+    n, k = w.shape
+    s = jnp.repeat(scales.astype(jnp.float32), group_size, axis=1)
+    z = jnp.repeat(zeros.astype(jnp.float32), group_size, axis=1)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s) + z, 0.0, 15.0)
+    q = q.astype(jnp.uint8)
+    lo = q[:, 0::2]
+    hi = q[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)

@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The FIRST two lines above run before any other import (jax locks the device
+count on first init). Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out artifacts/dryrun
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` holding
+``memory_analysis()`` (proves it fits), ``cost_analysis()`` FLOPs/bytes and
+the parsed per-collective ICI bytes — the §Roofline inputs.
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.config import apply_overrides, parse_overrides
+from repro.configs.registry import (ARCH_IDS, SHAPES, get_config,
+                                    shape_names_for)
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import transformer as T
+from repro.serving.engine import serve_step
+from repro.training.train_step import make_train_step
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides=None, quantized_decode: bool = True):
+    """Lower + compile one cell; returns the artifact dict."""
+    cfg = get_config(arch)
+    if overrides:
+        apply_overrides(cfg, overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.make_rules(mesh, cfg.parallel)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    with mesh:
+        specs = input_specs(cfg, shape, rules,
+                            quantized_decode=quantized_decode)
+        if shape.kind == "train":
+            step = make_train_step(cfg)
+
+            def fn(state, batch):
+                with shd.use_rules(rules):
+                    return step(state, batch)
+
+            lowered = jax.jit(fn).lower(specs["state"], specs["batch"])
+        elif shape.kind == "prefill":
+            def fn(params, batch):
+                with shd.use_rules(rules):
+                    if cfg.model.is_encoder_decoder:
+                        return T.encdec_prefill(
+                            cfg.model, params, batch["frames"],
+                            batch["tokens"], shape.seq_len)
+                    return T.prefill(cfg.model, params, batch["tokens"],
+                                     shape.seq_len,
+                                     embeds=batch.get("embeds"))
+
+            lowered = jax.jit(fn).lower(specs["params"], specs["batch"])
+        else:  # decode
+            def fn(params, token, pos, caches):
+                with shd.use_rules(rules):
+                    return serve_step(cfg, params, token, pos, caches)
+
+            lowered = jax.jit(fn).lower(specs["params"], specs["token"],
+                                        specs["pos"], specs["caches"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    hlo_text = compiled.as_text()
+    terms = hlo.cost_terms(compiled, hlo_text, n_dev,
+                           model_flops=hlo.model_flops_estimate(cfg, shape))
+    terms.update({
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "seconds_lower": t_lower, "seconds_compile": t_compile,
+        "quantized_decode": bool(shape.kind == "decode"
+                                 and quantized_decode),
+        "total_params": hlo.total_param_count(cfg.model),
+        "active_params": hlo.active_param_count(cfg.model),
+    })
+    return terms
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--fp-decode", action="store_true",
+                    help="decode cells with bf16 (not int4) weights")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("overrides", nargs="*")
+    args = ap.parse_args(argv)
+    overrides = parse_overrides(args.overrides)
+
+    cells = []
+    archs = [a for a in ARCH_IDS if a != "opt-proxy"] \
+        if args.all or args.arch is None else [args.arch]
+    for arch in archs:
+        shapes = shape_names_for(arch) if args.shape is None \
+            else [args.shape]
+        for s in shapes:
+            meshes = {"pod": [False], "multipod": [True],
+                      "both": [False, True]}[args.mesh]
+            for mp in meshes:
+                cells.append((arch, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, s, mp in cells:
+        tag = f"{arch}__{s}__{'2x16x16' if mp else '16x16'}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] {tag}: cached")
+            continue
+        print(f"[dryrun] {tag}: lowering...", flush=True)
+        try:
+            art = lower_cell(arch, s, mp, overrides,
+                             quantized_decode=not args.fp_decode)
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            print(f"[dryrun] {tag}: OK  compute={art['t_compute_s']:.4f}s "
+                  f"memory={art['t_memory_s']:.4f}s "
+                  f"collective={art['t_collective_s']:.4f}s "
+                  f"dominant={art['dominant']} "
+                  f"(lower {art['seconds_lower']:.0f}s, "
+                  f"compile {art['seconds_compile']:.0f}s)", flush=True)
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            print(f"[dryrun] {tag}: FAILED {e!r}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        sys.exit(1)
+    print(f"\nall {len(cells)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources (§Roofline of EXPERIMENTS.md):
+  - ``compiled.cost_analysis()`` → HLO FLOPs and bytes accessed;
+  - the compiled HLO text → per-collective ICI bytes (not in cost_analysis):
+    every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute is parsed for result size and replica-group size and
+    converted to *per-chip ICI traffic* with ring-algorithm estimates:
+
+        all-gather        R·(g−1)/g          (R = result bytes/chip)
+        all-reduce        2·S·(g−1)/g        (S = operand bytes)
+        reduce-scatter    R·(g−1)            (R = result bytes; op = R·g)
+        all-to-all        S·(g−1)/g
+        collective-permute S
+
+  - hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+    ~50 GB/s/link ICI (3 links/chip; the collective term uses one link,
+    i.e. the most conservative single-ring estimate).
+
+Async pairs (``*-start``/``*-done``) are counted once at ``-start``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (one ring)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(.*?)\s+(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _result_bytes(result_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(result_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, float]       # summed result bytes per op kind
+    ici_bytes_per_chip: float            # ring-estimate traffic, one chip
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    rbytes: Dict[str, float] = {}
+    ici = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_str, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        if op.endswith("-done"):
+            continue
+        r = _result_bytes(result_str)
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        counts[kind] = counts.get(kind, 0) + 1
+        rbytes[kind] = rbytes.get(kind, 0.0) + r
+        if kind == "all-gather":
+            ici += r * (g - 1) / g
+        elif kind == "all-reduce":
+            ici += 2.0 * r * (g - 1) / g
+        elif kind == "reduce-scatter":
+            ici += r * (g - 1)
+        elif kind == "all-to-all":
+            ici += r * (g - 1) / g
+        elif kind == "collective-permute":
+            ici += r
+    return CollectiveStats(counts, rbytes, ici)
+
+
+def cost_terms(compiled, hlo_text: str, n_devices: int,
+               model_flops: float = 0.0) -> Dict[str, Any]:
+    """The three roofline terms (+ inputs) for one compiled executable.
+
+    FLOPs/bytes/collectives come from the trip-count-aware HLO-text
+    analyzer (``hlo_text.HloCostAnalyzer``) — XLA's ``cost_analysis()``
+    counts ``while`` bodies once, under-reporting scanned-layer models by
+    the layer count (measured; raw values kept under ``xla_cost_analysis``
+    for comparison).
+    """
+    from repro.launch.hlo_text import HloCostAnalyzer
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+
+    an = HloCostAnalyzer(hlo_text, n_devices)
+    cost = an.entry_cost()
+    flops = cost.flops
+    bytes_accessed = cost.bytes
+    coll = CollectiveStats(
+        {k: int(v) for k, v in cost.coll_counts.items()},
+        dict(cost.coll_bytes), cost.ici_bytes)
+
+    # the HLO is the per-device SPMD program: flops/bytes are per device.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll.ici_bytes_per_chip / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)), key=lambda kv: kv[1])[0]
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:            # backend-dependent; keep the dry-run up
+        mem["error"] = str(e)
+
+    out = {
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_accessed,
+        "xla_cost_analysis": {"flops": xla_flops,
+                              "bytes_accessed": xla_bytes},
+        "collectives": coll.to_dict(),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "memory_analysis": mem,
+        "n_devices": n_devices,
+    }
+    if model_flops > 0:
+        total_hlo = flops * n_devices
+        out["model_flops"] = model_flops
+        out["useful_fraction"] = model_flops / total_hlo if total_hlo else 0.0
+        bound = max(t_compute, t_memory, t_collective)
+        out["roofline_fraction"] = (
+            (model_flops / n_devices / PEAK_FLOPS) / bound if bound else 0.0)
+    return out
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for train;
+    2·N(_active) per generated token for decode; 2·N·D for prefill."""
+    mc = cfg.model
+    n_active = active_param_count(mc)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch      # decode: 1 token/seq
+
+
+def active_param_count(mc) -> float:
+    """Parameters touched per token (MoE counts top-k + shared experts)."""
+    d, l, v = mc.d_model, mc.num_layers, mc.vocab_size
+    h, kv, hd = mc.num_heads, mc.num_kv_heads, mc.head_dim
+    total = v * d * (1 if mc.tie_embeddings else 2)
+    for mixer, mlp_kind in _specs(mc):
+        if mixer == "mla":
+            m = mc.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            total += (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                      + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                      + m.kv_lora_rank * h * (m.qk_nope_head_dim
+                                              + m.v_head_dim)
+                      + h * m.v_head_dim * d)
+        elif mixer in ("attn", "swa", "local"):
+            total += d * (h + 2 * kv) * hd + h * hd * d
+        elif mixer == "rglru":
+            w = mc.rglru.lru_width
+            total += d * w * 2 + w * w * 2 + w * d + w * mc.rglru.conv1d_width
+        elif mixer == "mamba":
+            di = mc.ssm.expand * d
+            total += (d * 2 * di + di * mc.ssm.d_conv
+                      + di * (mc.ssm.dt_rank + 2 * mc.ssm.d_state)
+                      + mc.ssm.dt_rank * di + di * d)
+        if mlp_kind == "dense":
+            mult = 3 if mc.gated_mlp else 2
+            total += mult * d * mc.d_ff
+        elif mlp_kind == "moe":
+            m = mc.moe
+            mult = 3
+            total += mult * d * m.d_ff_expert * (m.top_k
+                                                 + m.num_shared_experts)
+            total += d * m.num_experts          # router
+    if mc.is_encoder_decoder:
+        # encoder layers + decoder cross-attention
+        total += mc.encoder_layers * (d * (h + 2 * kv) * hd + h * hd * d
+                                      + 2 * d * mc.d_ff)
+        total += mc.num_layers * (d * (h + 2 * kv) * hd + h * hd * d)
+    return float(total)
+
+
+def total_param_count(mc) -> float:
+    """All parameters (MoE counts every expert)."""
+    d = mc.d_model
+    total = active_param_count(mc)
+    for mixer, mlp_kind in _specs(mc):
+        if mlp_kind == "moe":
+            m = mc.moe
+            total += 3 * d * m.d_ff_expert * (m.num_experts - m.top_k)
+    return float(total)
+
+
+def _specs(mc):
+    from repro.models.transformer import layer_specs
+    return layer_specs(mc)

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single pod: 16×16 = 256 chips (v5e pod), axes (data, model).
+Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the ``pod`` axis
+crosses DCN; sharding rules keep per-layer traffic off it (DP gradient
+reduction and optional GPipe stages are the only pod-axis collectives).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
+    """Small CPU mesh for tests (requires forced host device count)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

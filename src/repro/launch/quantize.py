@@ -1,0 +1,75 @@
+"""Quantization launcher: calibrate → GPTQ → RPIQ → packed artifacts.
+
+    PYTHONPATH=src python -m repro.launch.quantize --arch opt-proxy --smoke \
+        quant.rpiq_iters=5 quant.rpiq_alpha=0.01
+
+Loads a checkpoint when train.ckpt_dir has one (quantizing a *trained*
+model); otherwise quantizes a fresh init (still exercises the full path).
+Prints the per-layer Γ convergence summary (paper Table 5) and writes the
+packed int4 params + report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+
+import jax
+
+from repro.config import apply_overrides, parse_overrides
+from repro.configs.registry import get_config
+from repro.core.pipeline import pack_for_serving, quantize_model
+from repro.data import MarkovLM, calibration_batches
+from repro.distributed.checkpoint import Checkpointer
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="artifacts/quantized")
+    ap.add_argument("overrides", nargs="*")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    apply_overrides(cfg, parse_overrides(args.overrides))
+    mc, qc = cfg.model, cfg.quant
+
+    key = jax.random.PRNGKey(0)
+    params = (T.init_encdec_params(mc, key) if mc.is_encoder_decoder
+              else T.init_params(mc, key))
+    ckpt = Checkpointer(cfg.train.ckpt_dir)
+    if ckpt.latest_step() is not None:
+        from repro.training.train_step import init_train_state
+        state, _ = ckpt.restore(init_train_state(cfg, key))
+        params = state.params
+        print(f"[quantize] loaded checkpoint step {ckpt.latest_step()}")
+
+    data = MarkovLM(mc.vocab_size, seed=7)
+    calib = calibration_batches(data, qc.calib_batches, qc.calib_batch_size,
+                                min(qc.calib_seq_len, mc.max_seq_len - 8))
+    if mc.is_encoder_decoder:
+        import jax.numpy as jnp
+        for i, b in enumerate(calib):
+            b["frames"] = jax.random.normal(
+                jax.random.PRNGKey(i),
+                (qc.calib_batch_size, mc.encoder_seq_len, mc.d_model),
+                jnp.float32)
+
+    params_q, report = quantize_model(cfg, params, calib, verbose=True)
+    print(f"[quantize] {report.summary()}")
+    packed = pack_for_serving(cfg, params_q)
+
+    os.makedirs(args.out, exist_ok=True)
+    tag = mc.name
+    with open(os.path.join(args.out, f"{tag}.report.json"), "w") as f:
+        json.dump([{**vars(r)} for r in report.linears], f, indent=1)
+    with open(os.path.join(args.out, f"{tag}.params.pkl"), "wb") as f:
+        pickle.dump(jax.device_get(packed), f)
+    print(f"[quantize] wrote {args.out}/{tag}.params.pkl")
+
+
+if __name__ == "__main__":
+    main()

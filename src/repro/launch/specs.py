@@ -1,0 +1,130 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape, rules)`` returns the exact pytree the
+corresponding step function is lowered with — weak-type-correct, carrying
+NamedShardings, no device allocation:
+
+  train   → (TrainState, batch{tokens[, embeds|frames]})
+  prefill → (params, batch)
+  decode  → (params_int4_or_bf16, token (B,), pos (B,), caches)
+
+Frontend stubs ([audio]/[vlm]): precomputed frame/patch embeddings of the
+documented shapes appear as batch["frames"] / batch["embeds"].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import Config
+from repro.configs.registry import ShapeSpec
+from repro.core.pipeline import pack_for_serving
+from repro.distributed import sharding as shd
+from repro.models import transformer as T
+from repro.training.train_step import init_train_state
+
+
+def batch_specs(cfg: Config, shape: ShapeSpec, rules: shd.Rules
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    mc = cfg.model
+    b = shape.global_batch
+    out: Dict[str, Any] = {}
+    if mc.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, mc.encoder_seq_len, mc.d_model), jnp.bfloat16)
+        out["tokens"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+    elif mc.frontend in ("vision", "audio") and mc.frontend_tokens > 0:
+        n_front = min(mc.frontend_tokens, shape.seq_len // 2)
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, n_front, mc.d_model), jnp.bfloat16)
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (b, shape.seq_len - n_front), jnp.int32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+    shardings = shd.batch_shardings(out, rules)
+    return shd.sds_with_shardings(out, shardings)
+
+
+def params_specs(cfg: Config, rules: shd.Rules, quantized: bool = False
+                 ) -> Any:
+    mc = cfg.model
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def build(k):
+        p = (T.init_encdec_params(mc, k) if mc.is_encoder_decoder
+             else T.init_params(mc, k))
+        p = jax.tree_util.tree_map(
+            lambda a: a.astype(jnp.dtype(mc.dtype))
+            if a.dtype == jnp.float32 and a.ndim >= 2 else a, p)
+        if quantized:
+            p = pack_for_serving(cfg, p)
+        return p
+
+    sds = jax.eval_shape(build, key)
+    shardings = shd.param_shardings(sds, rules, fsdp=cfg.parallel.fsdp)
+    return shd.sds_with_shardings(sds, shardings)
+
+
+def state_specs(cfg: Config, rules: shd.Rules) -> Any:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    sds = jax.eval_shape(functools.partial(init_train_state, cfg), key)
+    shardings = shd.train_state_shardings(sds, rules,
+                                          fsdp=cfg.parallel.fsdp)
+    return shd.sds_with_shardings(sds, shardings)
+
+
+def cache_specs(cfg: Config, shape: ShapeSpec, rules: shd.Rules) -> Any:
+    mc = cfg.model
+    b = shape.global_batch
+
+    def build():
+        if mc.is_encoder_decoder:
+            # decoder self-cache + cross-cache, stacked over layers
+            from repro.models import attention as attn
+            self_c = attn.init_kv_cache(mc, b, shape.seq_len, jnp.bfloat16)
+            cross_c = {"k": jnp.zeros((b, mc.encoder_seq_len,
+                                       mc.num_kv_heads, mc.head_dim),
+                                      jnp.bfloat16),
+                       "v": jnp.zeros((b, mc.encoder_seq_len,
+                                       mc.num_kv_heads, mc.head_dim),
+                                      jnp.bfloat16)}
+            one = {"self": self_c, "cross": cross_c}
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (mc.num_layers,) + a.shape), one)
+        return T.init_block_caches(mc, b, shape.seq_len, jnp.bfloat16)
+
+    sds = jax.eval_shape(build)
+    shardings = shd.cache_shardings(sds, rules)
+    return shd.sds_with_shardings(sds, shardings)
+
+
+def decode_token_specs(cfg: Config, shape: ShapeSpec, rules: shd.Rules
+                       ) -> Tuple[Any, Any]:
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    sh = shd.batch_shardings({"t": tok, "p": pos}, rules)
+    out = shd.sds_with_shardings({"t": tok, "p": pos}, sh)
+    return out["t"], out["p"]
+
+
+def input_specs(cfg: Config, shape: ShapeSpec, rules: shd.Rules, *,
+                quantized_decode: bool = True) -> Dict[str, Any]:
+    """Everything the dry-run lowers with, per shape kind."""
+    if shape.kind == "train":
+        return {"state": state_specs(cfg, rules),
+                "batch": batch_specs(cfg, shape, rules)}
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg, rules, quantized=False),
+                "batch": batch_specs(cfg, shape, rules)}
+    if shape.kind == "decode":
+        tok, pos = decode_token_specs(cfg, shape, rules)
+        return {"params": params_specs(cfg, rules,
+                                       quantized=quantized_decode),
+                "token": tok, "pos": pos,
+                "caches": cache_specs(cfg, shape, rules)}
+    raise ValueError(shape.kind)

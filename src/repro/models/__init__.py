@@ -1,0 +1,3 @@
+"""Model zoo: pure-JAX functional models for all assigned architectures."""
+from repro.models import transformer  # noqa: F401
+from repro.models.linear import Tap, dense  # noqa: F401

@@ -1,0 +1,176 @@
+"""Shared model layers: norms, MLPs, embeddings, rotary embeddings.
+
+Pure functions over param dicts. Compute dtype follows the input; norms
+and softmax statistics run in float32 for stability.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.linear import dense, init_dense
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, p: Dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp(cfg: ModelConfig, p: Dict, x: jax.Array, name: str = "mlp") -> jax.Array:
+    """Gated (llama-style) or plain two-layer MLP."""
+    if cfg.gated_mlp:
+        g = dense(p["gate"], x, f"{name}.gate")
+        u = dense(p["up"], x, f"{name}.up")
+        h = _act(cfg.act, g) * u
+    else:
+        h = _act(cfg.act, dense(p["up"], x, f"{name}.up"))
+    return dense(p["down"], h, f"{name}.down")
+
+
+def init_mlp(cfg: ModelConfig, key: jax.Array, d_model: int, d_ff: int,
+             bias: bool = False) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": init_dense(ks[0], d_model, d_ff, bias=bias),
+         "down": init_dense(ks[1], d_ff, d_model, bias=bias,
+                            scale=d_ff ** -0.5)}
+    if cfg.gated_mlp:
+        p["gate"] = init_dense(ks[2], d_model, d_ff, bias=bias)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+def embed(p: Dict, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed(cfg: ModelConfig, params: Dict, h: jax.Array) -> jax.Array:
+    """Final projection to vocab logits (tied or untied), fp32 logits."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["embedding"]          # (V, D)
+        logits = jnp.dot(h, w.T.astype(h.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        logits = dense(params["lm_head"], h, "lm_head").astype(jnp.float32)
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits.astype(jnp.float32)
+
+
+def init_embed(key: jax.Array, vocab: int, d: int) -> Dict:
+    return {"embedding": jax.random.normal(key, (vocab, d)) * 0.02}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the even head dims: (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                         # (hd/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv                          # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (B, S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal table: (seq_len, d_model) f32."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# 1D depthwise causal convolution (mamba / rglru / recurrentgemma blocks)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(p: Dict, x: jax.Array,
+                  state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over the sequence.
+
+    x: (B, S, C); p["w"]: (K, C) depthwise taps; p["b"]: (C,).
+    state: (B, K-1, C) trailing inputs from the previous chunk (decode) or
+    None (zeros — training/prefill from scratch).
+    Returns (y, new_state) with y: (B, S, C), new_state: (B, K-1, C).
+    """
+    w = p["w"].astype(x.dtype)                          # (K, C)
+    k = w.shape[0]
+    b, s, c = x.shape
+    if state is None:
+        state = jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    # y[t] = sum_j w[j] * xp[t + j]
+    y = jnp.zeros((b, s, c), jnp.float32)
+    for j in range(k):
+        y = y + xp[:, j:j + s, :].astype(jnp.float32) * w[j].astype(jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    new_state = xp[:, s:, :] if k > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def init_conv1d(key: jax.Array, width: int, channels: int,
+                bias: bool = True) -> Dict:
+    p = {"w": jax.random.normal(key, (width, channels)) * (width ** -0.5)}
+    if bias:
+        p["b"] = jnp.zeros((channels,), jnp.float32)
+    return p

@@ -1,0 +1,237 @@
+"""Recurrent sequence mixers: RG-LRU (recurrentgemma) and Mamba-1 (SSM).
+
+Both use a diagonal linear recurrence ``h_t = a_t ⊙ h_{t-1} + b_t`` computed
+with ``jax.lax.associative_scan`` at train/prefill (log-depth on TPU) and a
+single fused step at decode. Mamba's state is (d_inner, d_state) per token,
+so the parallel scan is **chunked**: ``lax.scan`` over chunks of the
+sequence carrying only the (B, d_inner, d_state) boundary state, associative
+scan within a chunk — peak memory (B, chunk, d_inner, d_state) instead of
+(B, S, d_inner, d_state). This is the TPU-native replacement for the CUDA
+selective-scan kernel (DESIGN.md hardware-adaptation notes).
+
+Quantizable linears (in/out/gate/x/dt projections) all route through
+``dense`` and are therefore visible to the RPIQ pipeline.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.linear import dense, init_dense
+from repro.models.layers import causal_conv1d, init_conv1d
+
+
+def _diag_recurrence(a: jax.Array, b: jax.Array,
+                     h0: Optional[jax.Array]) -> jax.Array:
+    """h_t = a_t ⊙ h_{t-1} + b_t along axis 1. a/b: (B, S, ...)."""
+    if h0 is not None:
+        # fold the boundary state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _chunked_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array,
+                        chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """Chunked diagonal recurrence. a/b: (B, S, ...); h0: (B, ...).
+
+    Returns (h: (B, S, ...), h_last: (B, ...)).
+    """
+    B, S = a.shape[:2]
+    if S <= chunk:
+        h = _diag_recurrence(a, b, h0)
+        return h, h[:, -1]
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    a_c = a.reshape(B, n, chunk, *a.shape[2:]).transpose(
+        1, 0, 2, *range(3, a.ndim + 1))
+    b_c = b.reshape(B, n, chunk, *b.shape[2:]).transpose(
+        1, 0, 2, *range(3, b.ndim + 1))
+
+    def step(h, xs):
+        ac, bc = xs
+        hc = _diag_recurrence(ac, bc, h)
+        return hc[:, -1], hc
+
+    h_last, hs = jax.lax.scan(step, h0, (a_c, b_c))
+    h = hs.transpose(1, 0, 2, *range(3, a.ndim + 1)).reshape(B, S,
+                                                             *a.shape[2:])
+    return h, h_last
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma / Griffin)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru_block(cfg: ModelConfig, key: jax.Array) -> Dict:
+    d, w = cfg.d_model, cfg.rglru.lru_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = sigmoid(Λ)^c lands in (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _RGLRU_C) / (1 - u ** (1.0 / _RGLRU_C)))
+    return {
+        "in": init_dense(ks[1], d, w),
+        "gate": init_dense(ks[2], d, w),
+        "conv": init_conv1d(ks[3], cfg.rglru.conv1d_width, w),
+        "rg": init_dense(ks[4], w, w, scale=w ** -0.5),   # recurrence gate
+        "ig": init_dense(ks[5], w, w, scale=w ** -0.5),   # input gate
+        "lambda": lam,
+        "out": init_dense(jax.random.fold_in(key, 7), w, d,
+                          scale=w ** -0.5),
+    }
+
+
+def _rglru_gates(p: Dict, x: jax.Array, name: str):
+    """log_a: (B, S, W) in log space; gated input (B, S, W)."""
+    r = jax.nn.sigmoid(dense(p["rg"], x, f"{name}.rg").astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["ig"], x, f"{name}.ig").astype(jnp.float32))
+    log_a = -_RGLRU_C * r * jax.nn.softplus(-p["lambda"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # normalized input: sqrt(1 - a^2) ⊙ (i ⊙ x)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+                state: Optional[Dict] = None, name: str = "rglru"
+                ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence RG-LRU temporal-mix block. x: (B, S, D).
+
+    state: {"conv": (B, K-1, W), "h": (B, W)} or None.
+    Returns (y: (B, S, D), new_state).
+    """
+    gate = jax.nn.gelu(dense(p["gate"], x, f"{name}.gate"))
+    u = dense(p["in"], x, f"{name}.in")
+    conv_state = None if state is None else state["conv"]
+    u, conv_state = causal_conv1d(p["conv"], u, conv_state)
+    a, b = _rglru_gates(p, u, name)
+    h0 = None if state is None else state["h"].astype(jnp.float32)
+    h, h_last = _chunked_recurrence(a, b, jnp.zeros_like(a[:, 0])
+                                    if h0 is None else h0, chunk=1024)
+    y = dense(p["out"], (h.astype(x.dtype) * gate), f"{name}.out")
+    return y, {"conv": conv_state, "h": h_last.astype(x.dtype)}
+
+
+def rglru_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
+                 name: str = "rglru") -> Tuple[jax.Array, Dict]:
+    """Single-token step. x: (B, 1, D)."""
+    gate = jax.nn.gelu(dense(p["gate"], x, f"{name}.gate"))
+    u = dense(p["in"], x, f"{name}.in")
+    u, conv_state = causal_conv1d(p["conv"], u, state["conv"])
+    a, b = _rglru_gates(p, u, name)                    # (B, 1, W)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    y = dense(p["out"], (h[:, None, :].astype(x.dtype) * gate),
+              f"{name}.out")
+    return y, {"conv": conv_state, "h": h.astype(x.dtype)}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    w = cfg.rglru.lru_width
+    k = cfg.rglru.conv1d_width
+    return {"conv": jnp.zeros((batch, k - 1, w), dtype),
+            "h": jnp.zeros((batch, w), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(cfg: ModelConfig, key: jax.Array) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    ks = jax.random.split(key, 5)
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in": init_dense(ks[0], d, 2 * d_inner),
+        "conv": init_conv1d(ks[1], s.d_conv, d_inner),
+        "x": init_dense(ks[2], d_inner, s.dt_rank + 2 * s.d_state),
+        "dt": init_dense(ks[3], s.dt_rank, d_inner, bias=True),
+        "a_log": jnp.log(a),                       # (d_inner, d_state)
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out": init_dense(ks[4], d_inner, d, scale=d_inner ** -0.5),
+    }
+
+
+def _mamba_ssm_inputs(cfg: ModelConfig, p: Dict, u: jax.Array, name: str):
+    """u: (B, S, d_inner) post-conv. Returns (a, b, C) for the recurrence."""
+    s = cfg.ssm
+    proj = dense(p["x"], u, f"{name}.x").astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [s.dt_rank, s.dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt"], dt.astype(u.dtype), f"{name}.dt")
+                         .astype(jnp.float32))               # (B,S,d_inner)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))             # (d_inner, n)
+    a = jnp.exp(dt[..., None] * A[None, None])               # (B,S,d,n)
+    b = (dt[..., None] * Bm[:, :, None, :]) * \
+        u.astype(jnp.float32)[..., None]                     # (B,S,d,n)
+    return a, b, Cm
+
+
+def mamba_block(cfg: ModelConfig, p: Dict, x: jax.Array,
+                state: Optional[Dict] = None, name: str = "mamba"
+                ) -> Tuple[jax.Array, Dict]:
+    """Full-sequence Mamba block. x: (B, S, D)."""
+    from repro.kernels import ops as kops
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    xz = dense(p["in"], x, f"{name}.in")
+    u, z = jnp.split(xz, [d_inner], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    u, conv_state = causal_conv1d(p["conv"], u, conv_state)
+    u = jax.nn.silu(u)
+    proj = dense(p["x"], u, f"{name}.x").astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [s.dt_rank, s.dt_rank + s.d_state],
+                           axis=-1)
+    dt = jax.nn.softplus(dense(p["dt"], dt.astype(u.dtype), f"{name}.dt")
+                         .astype(jnp.float32))
+    h0 = (jnp.zeros((x.shape[0], d_inner, s.d_state), jnp.float32)
+          if state is None else state["h"].astype(jnp.float32))
+    # selective scan: Pallas kernel on TPU (state in VMEM, O(B·S·d) HBM
+    # traffic); chunked associative scan on other backends
+    y, h_last = kops.selective_scan(u, dt, Bm, Cm, p["a_log"], p["d_skip"],
+                                    h0)
+    y = (y.astype(jnp.float32)
+         * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = dense(p["out"], y, f"{name}.out")
+    return out, {"conv": conv_state, "h": h_last.astype(x.dtype)}
+
+
+def mamba_decode(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict,
+                 name: str = "mamba") -> Tuple[jax.Array, Dict]:
+    """Single-token step. x: (B, 1, D)."""
+    d_inner = cfg.ssm.expand * cfg.d_model
+    xz = dense(p["in"], x, f"{name}.in")
+    u, z = jnp.split(xz, [d_inner], axis=-1)
+    u, conv_state = causal_conv1d(p["conv"], u, state["conv"])
+    u = jax.nn.silu(u)
+    a, b, Cm = _mamba_ssm_inputs(cfg, p, u, name)            # (B,1,d,n)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]   # (B,d,n)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = y + u[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    # round y to the compute dtype *before* the gate, matching the
+    # full-sequence kernel's output rounding point exactly
+    y = y.astype(x.dtype).astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = dense(p["out"], y[:, None, :], f"{name}.out")
+    return out, {"conv": conv_state, "h": h.astype(x.dtype)}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+            "h": jnp.zeros((batch, d_inner, s.d_state), dtype)}

@@ -1,0 +1,97 @@
+"""Batched serving engine.
+
+``serve_step`` is the unit the dry-run lowers for decode shapes: one new
+token for every sequence in the batch against a populated cache. The engine
+wraps it in a greedy/temperature generation loop with a ragged-completion
+mask (sequences finish independently; finished lanes keep decoding pad
+tokens but their outputs are frozen — the standard static-shape batch
+pattern).
+
+Weights may be full precision or int4-packed (``QuantizedTensor`` leaves,
+produced by core/pipeline.quantize_model) — ``models.linear.dense``
+dispatches per leaf, so the same step function serves both and the dry-run
+can lower the quantized decode path explicitly (the paper's deployment
+claim: §Perf compares both).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import Config
+from repro.models import transformer as T
+
+
+class GenResult(NamedTuple):
+    tokens: jax.Array       # (B, max_new) generated ids
+    logprobs: jax.Array     # (B, max_new)
+    steps: jax.Array        # (B,) tokens actually produced
+
+
+def serve_step(cfg: Config, params: Any, token: jax.Array, pos: jax.Array,
+               caches: Any) -> Tuple[jax.Array, Any]:
+    """One decode step (the dry-run unit). token/pos: (B,)."""
+    if cfg.model.is_encoder_decoder:
+        return T.encdec_decode_step(cfg.model, params, token, pos, caches)
+    return T.decode_step(cfg.model, params, token, pos, caches)
+
+
+def prefill(cfg: Config, params: Any, batch: Dict[str, jax.Array],
+            max_len: int) -> Tuple[jax.Array, Any]:
+    """Prefill from a batch dict ({tokens, embeds?/frames?})."""
+    if cfg.model.is_encoder_decoder:
+        return T.encdec_prefill(cfg.model, params, batch["frames"],
+                                batch["tokens"], max_len)
+    return T.prefill(cfg.model, params, batch["tokens"], max_len,
+                     embeds=batch.get("embeds"))
+
+
+def _sample(key: jax.Array, logits: jax.Array, temperature: float
+            ) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,
+             max_new_tokens: Optional[int] = None, eos_id: int = -1,
+             temperature: Optional[float] = None,
+             seed: int = 0) -> GenResult:
+    """Greedy/temperature generation. Static shapes; jit-compiled loop."""
+    sc = cfg.serve
+    mnt = max_new_tokens or sc.max_new_tokens
+    temp = sc.temperature if temperature is None else temperature
+    b, s0 = batch["tokens"].shape
+    n_front = batch["embeds"].shape[1] if batch.get("embeds") is not None \
+        else 0
+    max_len = s0 + n_front + mnt + 1
+    logits, caches = prefill(cfg, params, batch, max_len)
+
+    def body(carry, i):
+        token, pos, caches, done, key = carry
+        key, sub = jax.random.split(key)
+        lg, caches = serve_step(cfg, params, token, pos, caches)
+        nxt = _sample(sub, lg, temp)
+        lp = jax.nn.log_softmax(lg)[jnp.arange(b), nxt]
+        nxt = jnp.where(done, 0, nxt)
+        newly_done = done | (nxt == eos_id)
+        out = (nxt, jnp.where(done, 0.0, lp))
+        return (nxt, pos + 1, caches, newly_done, key), out
+
+    first = _sample(jax.random.PRNGKey(seed), logits, temp)
+    lp0 = jax.nn.log_softmax(logits)[jnp.arange(b), first]
+    pos0 = jnp.full((b,), s0 + n_front, jnp.int32)
+    done0 = first == eos_id
+    carry = (first, pos0, caches, done0, jax.random.PRNGKey(seed + 1))
+    if mnt > 1:
+        carry, (toks, lps) = jax.lax.scan(body, carry,
+                                          jnp.arange(mnt - 1))
+        tokens = jnp.concatenate([first[:, None], toks.T], axis=1)
+        logprobs = jnp.concatenate([lp0[:, None], lps.T], axis=1)
+    else:
+        tokens, logprobs = first[:, None], lp0[:, None]
+    steps = jnp.sum((tokens != 0).astype(jnp.int32), axis=1)
+    return GenResult(tokens, logprobs, steps)

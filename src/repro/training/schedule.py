@@ -1,0 +1,29 @@
+"""LR schedules: cosine, WSD (warmup-stable-decay, minicpm), constant."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def learning_rate(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.asarray(max(tc.warmup_steps, 1), jnp.float32)
+    total = jnp.asarray(max(tc.steps, 1), jnp.float32)
+    base = jnp.asarray(tc.lr, jnp.float32)
+    warmup = base * jnp.minimum((s + 1.0) / warm, 1.0)   # lr > 0 at step 0
+    if tc.schedule == "constant":
+        return warmup
+    if tc.schedule == "cosine":
+        t = jnp.clip((s - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+        return jnp.where(s < warm, warmup,
+                         base * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+    if tc.schedule == "wsd":
+        # warmup → stable plateau → exponential-ish linear decay tail
+        stable_end = warm + (total - warm) * tc.wsd_stable_frac
+        t = jnp.clip((s - stable_end) / jnp.maximum(total - stable_end, 1.0),
+                     0.0, 1.0)
+        decay = base * (1.0 - t * (1.0 - 0.1))       # decay to 10%
+        return jnp.where(s < warm, warmup,
+                         jnp.where(s < stable_end, base, decay))
+    raise ValueError(tc.schedule)

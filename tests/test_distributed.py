@@ -1,0 +1,46 @@
+"""Multi-device behaviour, run in subprocesses so the main pytest process
+keeps the single real CPU device (dry-run contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "_distributed_checks.py")
+
+
+def _run(check: str, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.pop("PYTHONPATH", None)
+    r = subprocess.run([sys.executable, _SCRIPT, check],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, \
+        f"{check} failed:\nSTDOUT:{r.stdout[-3000:]}\nSTDERR:{r.stderr[-3000:]}"
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_single():
+    _run("sharded_train")
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes():
+    _run("elastic_restore")
+
+
+@pytest.mark.slow
+def test_grad_compression_error_feedback():
+    _run("grad_compression")
+
+
+@pytest.mark.slow
+def test_gpipe_matches_stacked_forward():
+    _run("gpipe")
+
+
+@pytest.mark.slow
+def test_row_sharded_gptq_exact():
+    _run("gptq_rows")

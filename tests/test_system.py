@@ -1,0 +1,81 @@
+"""End-to-end system behaviour: the paper's full loop on CPU scale.
+
+train (opt-proxy) → quantize (GPTQ stage 1 + RPIQ stage 2, single-instance
+calibration) → serve (int4-packed decode) → verify quality ordering:
+fp ≥ RPIQ ≥ GPTQ-only on held-out perplexity (the paper's Table 1 claim at
+smoke scale).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.pipeline import pack_for_serving, quantize_model
+from repro.data import MarkovLM, calibration_batches
+from repro.models import transformer as T
+from repro.serving.engine import generate
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def _ppl(cfg, params, data, n=4, b=8, s=32):
+    tot, cnt = 0.0, 0
+    for i in range(n):
+        toks = data.batch(b, s)["tokens"]
+        logits, _ = T.forward(cfg.model, params, toks)
+        logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+        gold = jnp.take_along_axis(logits[:, :-1],
+                                   toks[:, 1:, None], axis=-1)[..., 0]
+        tot += float(jnp.sum(logz - gold))
+        cnt += int(toks[:, 1:].size)
+    return float(np.exp(tot / cnt))
+
+
+@pytest.mark.slow
+def test_train_quantize_serve_loop():
+    cfg = get_config("opt-proxy", smoke=True)
+    cfg.train.lr = 3e-3
+    cfg.train.warmup_steps = 5
+    cfg.quant.rpiq_use_global_hessian = False   # eq.6 mode (stronger)
+    cfg.quant.rpiq_alpha = 0.3
+    cfg.quant.rpiq_iters = 6
+
+    # 1. train until the model clearly beats random
+    st = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+    data = MarkovLM(cfg.model.vocab_size, seed=0, branching=3)
+    for i in range(80):
+        st, m = step(st, data.batch(8, 32))
+    params = st.params
+    eval_data = MarkovLM(cfg.model.vocab_size, seed=99, branching=3)
+    # same chain structure: MarkovLM transition depends only on seed...
+    # use a held-out stream of the SAME process for eval:
+    eval_data = MarkovLM(cfg.model.vocab_size, seed=0, branching=3)
+    eval_data.step = 10_000
+    ppl_fp = _ppl(cfg, params, eval_data)
+    assert ppl_fp < cfg.model.vocab_size / 4    # actually learned
+
+    # 2. quantize: GPTQ-only vs full RPIQ
+    calib = calibration_batches(MarkovLM(cfg.model.vocab_size, seed=0,
+                                         branching=3), 4, 8, 32)
+    cfg_gptq = get_config("opt-proxy", smoke=True)
+    cfg_gptq.quant.rpiq_iters = 0
+    pq_gptq, _ = quantize_model(cfg_gptq, params, calib)
+    pq_rpiq, report = quantize_model(cfg, params, calib)
+
+    eval_data.step = 10_000
+    ppl_gptq = _ppl(cfg, pq_gptq, eval_data)
+    eval_data.step = 10_000
+    ppl_rpiq = _ppl(cfg, pq_rpiq, eval_data)
+
+    # quality ordering with tolerance: quantized within 25% of fp; RPIQ not
+    # worse than GPTQ by more than 2% (usually better).
+    assert ppl_gptq < ppl_fp * 1.25, (ppl_fp, ppl_gptq)
+    assert ppl_rpiq <= ppl_gptq * 1.02, (ppl_gptq, ppl_rpiq)
+
+    # 3. serve the packed model
+    packed = pack_for_serving(cfg, pq_rpiq)
+    batch = data.batch(2, 8)
+    res = generate(cfg, packed, batch, max_new_tokens=4, temperature=0.0)
+    assert res.tokens.shape == (2, 4)
+    assert not np.any(np.isnan(np.asarray(res.logprobs)))
