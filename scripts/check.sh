@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify recipe (ROADMAP.md), executable: install dev deps if
+# possible, then run the test suite. Extra args pass through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" >/dev/null 2>&1; then
+  pip install -r requirements-dev.txt \
+    || echo "WARN: could not install dev deps (offline?); property tests" \
+            "run on the deterministic fallback shim" >&2
+fi
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

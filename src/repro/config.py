@@ -177,6 +177,10 @@ class QuantConfig:
     calib_seq_len: int = 512
     act_order: bool = False
     kernel_impl: str = "xla"        # xla | pallas (serving matmul backend)
+    batched_executor: bool = True   # group same-shape linears into vmapped
+    #                                 GPTQ+RPIQ plan dispatches (core/plan.py);
+    #                                 False = legacy per-linear dispatch
+    #                                 (table4 baseline, parity tests)
 
 
 @dataclass

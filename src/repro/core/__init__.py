@@ -2,4 +2,7 @@
 from repro.core.quant import (QuantParams, QuantizedTensor, compute_qparams,
                               fake_quantize, pack_quantized, dequantize_packed,
                               pack_int4, unpack_int4)  # noqa: F401
-from repro.core.hessian import HessianState, init_hessian, accumulate, damped  # noqa: F401
+from repro.core.hessian import (HessianState, init_hessian, accumulate,
+                                damped, stack_states)  # noqa: F401
+from repro.core.plan import (PlanMember, QuantGroup, QuantPlan, QuantReport,
+                             LinearRecord, build_plan, execute_plan)  # noqa: F401

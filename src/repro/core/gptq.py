@@ -61,16 +61,10 @@ def _quant_col(w: jax.Array, scale: jax.Array, zero: jax.Array, bits: int,
     return (q - zero) * scale
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "group_size",
-                                             "blocksize", "symmetric"))
-def gptq_quantize(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
-                  group_size: int = 128, blocksize: int = 128,
-                  symmetric: bool = False) -> GPTQResult:
-    """Quantize ``w`` (out, in) given ``hinv_u``, upper Cholesky of H̃^{-1}.
-
-    ``in % blocksize == 0`` and ``blocksize % group_size == 0`` (shipped
-    configs use 128/128; tests exercise smaller aligned sizes).
-    """
+def _gptq_core(w: jax.Array, hinv_u: jax.Array, *, bits: int,
+               group_size: int, blocksize: int,
+               symmetric: bool) -> GPTQResult:
+    """Single-linear GPTQ body — traceable, vmappable (see batched entry)."""
     out_dim, in_dim = w.shape
     assert in_dim % blocksize == 0, (w.shape, blocksize)
     assert blocksize % group_size == 0, (blocksize, group_size)
@@ -142,6 +136,39 @@ def gptq_quantize(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
     return GPTQResult(w_q, scales, zeros, tot_err)
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "group_size",
+                                             "blocksize", "symmetric"))
+def gptq_quantize(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
+                  group_size: int = 128, blocksize: int = 128,
+                  symmetric: bool = False) -> GPTQResult:
+    """Quantize ``w`` (out, in) given ``hinv_u``, upper Cholesky of H̃^{-1}.
+
+    ``in % blocksize == 0`` and ``blocksize % group_size == 0`` (shipped
+    configs use 128/128; tests exercise smaller aligned sizes).
+    """
+    return _gptq_core(w, hinv_u, bits=bits, group_size=group_size,
+                      blocksize=blocksize, symmetric=symmetric)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size",
+                                             "blocksize", "symmetric"))
+def gptq_quantize_batched(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
+                          group_size: int = 128, blocksize: int = 128,
+                          symmetric: bool = False) -> GPTQResult:
+    """vmapped GPTQ over a stacked leading axis.
+
+    w: (B, out, in); hinv_u: (B, in, in). One jit cache entry covers the
+    whole group — B same-shape linears quantize in a single dispatch, and
+    every per-column op inside the loop is B× wider, which is the
+    quant-plan executor's throughput win over per-linear dispatch.
+    Fields of the returned GPTQResult carry the stacked leading axis.
+    """
+    assert w.ndim == 3 and hinv_u.ndim == 3, (w.shape, hinv_u.shape)
+    fn = functools.partial(_gptq_core, bits=bits, group_size=group_size,
+                           blocksize=blocksize, symmetric=symmetric)
+    return jax.vmap(fn)(w, hinv_u)
+
+
 def gptq_from_hessian(w: jax.Array, H: hess.HessianState, *, bits: int = 4,
                       group_size: int = 128, blocksize: int = 128,
                       percdamp: float = 0.01,
@@ -162,3 +189,21 @@ def rtn_quantize(w: jax.Array, *, bits: int = 4, group_size: int = 128,
     q = quantize_codes(w, qp, bits, group_size, symmetric)
     dq = dequantize_codes(q, qp, group_size, symmetric)
     return GPTQResult(dq, qp.scales, qp.zeros, jnp.zeros((), jnp.float32))
+
+
+def rtn_quantize_batched(w: jax.Array, *, bits: int = 4,
+                         group_size: int = 128,
+                         symmetric: bool = False) -> GPTQResult:
+    """RTN over a stacked (B, out, in) weight block.
+
+    RTN is purely row-wise, so the stack folds into the row axis — no vmap
+    needed. Used for the MoE starved-expert fallback mask inside a batched
+    group.
+    """
+    b, o, i = w.shape
+    res = rtn_quantize(w.reshape(b * o, i), bits=bits, group_size=group_size,
+                       symmetric=symmetric)
+    return GPTQResult(res.w_q.reshape(b, o, i),
+                      res.scales.reshape(b, o, -1),
+                      res.zeros.reshape(b, o, -1),
+                      jnp.zeros((b,), jnp.float32))

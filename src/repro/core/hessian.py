@@ -21,33 +21,79 @@ from repro.kernels import ops as kops
 
 
 class HessianState(NamedTuple):
-    H: jax.Array          # (in, in) float32 Gram accumulator
-    count: jax.Array      # scalar int32: total rows (tokens) accumulated
+    """Gram accumulator for one linear — or a *stack* of same-shape linears.
+
+    Singleton: H (in, in), count scalar. Stacked (the quant-plan batched
+    executors, MoE expert stacks): H (B, in, in), count (B,) — every op
+    below accepts both layouts.
+    """
+    H: jax.Array          # (in, in) | (B, in, in) float32 Gram accumulator
+    count: jax.Array      # () | (B,) int32: total rows (tokens) accumulated
 
 
-def init_hessian(in_dim: int) -> HessianState:
-    return HessianState(jnp.zeros((in_dim, in_dim), jnp.float32),
-                        jnp.zeros((), jnp.int32))
+def init_hessian(in_dim: int, batch: Optional[int] = None) -> HessianState:
+    if batch is None:
+        return HessianState(jnp.zeros((in_dim, in_dim), jnp.float32),
+                            jnp.zeros((), jnp.int32))
+    return HessianState(jnp.zeros((batch, in_dim, in_dim), jnp.float32),
+                        jnp.zeros((batch,), jnp.int32))
 
 
 @jax.jit
 def accumulate(state: HessianState, x: jax.Array) -> HessianState:
-    """Add one calibration batch. x: (..., in) — leading dims flattened."""
-    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    H = state.H + kops.hessian_accum(x2)
-    return HessianState(H, state.count + x2.shape[0])
+    """Add one calibration batch.
+
+    Singleton state: x (..., in) — leading dims flattened. Stacked state:
+    x (B, ..., in) — per-member Gram updates in one batched contraction
+    (each member sees its own rows; no cross-member mixing).
+    """
+    if state.H.ndim == 2:
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        H = state.H + kops.hessian_accum(x2)
+        return HessianState(H, state.count + x2.shape[0])
+    b = state.H.shape[0]
+    x3 = x.reshape(b, -1, x.shape[-1]).astype(jnp.float32)
+    # HIGHEST: match the singleton kernel's full-fp32 accumulation contract
+    # on TPU (default MXU precision would silently break batched==legacy
+    # Hessian parity there)
+    H = state.H + jnp.einsum("bni,bnj->bij", x3, x3,
+                             precision=jax.lax.Precision.HIGHEST)
+    return HessianState(H, state.count + x3.shape[1])
+
+
+def stack_states(states) -> HessianState:
+    """Stack singleton HessianStates into one (B, in, in) stacked state."""
+    return HessianState(
+        jnp.stack([s.H for s in states]),
+        jnp.stack([jnp.asarray(s.count, jnp.int32).reshape(()) for s in
+                   states]))
 
 
 def damped(state: HessianState, percdamp: float) -> jax.Array:
-    """eq. 10: H̃ = H + percdamp·mean(diag H)·I  (also rescues dead columns)."""
+    """eq. 10: H̃ = H + percdamp·mean(diag H)·I  (also rescues dead columns).
+
+    Works on singleton (in, in) and stacked (B, in, in) states alike.
+    """
     H = state.H
-    diag = jnp.diag(H)
-    lam = percdamp * jnp.mean(diag)
+    diag = jnp.diagonal(H, axis1=-2, axis2=-1)           # (..., in)
+    lam = jnp.mean(diag, axis=-1) * percdamp             # (...,)
     # GPTQ convention: columns with zero activation get diag forced to 1 so
     # the Cholesky stays well-posed; the corresponding weights quantize RTN.
     dead = diag <= 0.0
-    H = H + jnp.where(dead, 1.0, 0.0) * jnp.eye(H.shape[0], dtype=H.dtype)
-    return H + lam * jnp.eye(H.shape[0], dtype=H.dtype)
+    eye = jnp.eye(H.shape[-1], dtype=H.dtype)
+    H = H + jnp.where(dead, 1.0, 0.0)[..., None, :] * eye
+    return H + lam[..., None, None] * eye
+
+
+def _cholesky_inverse_upper_2d(Hd: jax.Array) -> jax.Array:
+    n = Hd.shape[0]
+    L = jnp.linalg.cholesky(Hd)
+    Hinv = jax.scipy.linalg.cho_solve((L, True), jnp.eye(n, dtype=Hd.dtype))
+    # upper factor: cholesky returns lower L' with Hinv = L'L'^T; we need
+    # U with Hinv = U^T U?  torch's upper=True returns U s.t. Hinv = U^T U
+    # ... actually torch.cholesky(A, upper=True) returns U with A = U^T U.
+    Lu = jnp.linalg.cholesky(Hinv)          # Hinv = Lu Lu^T
+    return Lu.T                             # U = Lu^T  => Hinv = U^T U
 
 
 @jax.jit
@@ -59,15 +105,11 @@ def cholesky_inverse_upper(Hd: jax.Array) -> jax.Array:
 
     We compute H^{-1} via a Cholesky solve then factor it. fp64 would be
     nicer but TPUs are fp32; percdamp keeps this stable in practice.
+    Accepts a stacked (B, in, in) ``Hd`` (vmapped per member).
     """
-    n = Hd.shape[0]
-    L = jnp.linalg.cholesky(Hd)
-    Hinv = jax.scipy.linalg.cho_solve((L, True), jnp.eye(n, dtype=Hd.dtype))
-    # upper factor: cholesky returns lower L' with Hinv = L'L'^T; we need
-    # U with Hinv = U^T U?  torch's upper=True returns U s.t. Hinv = U^T U
-    # ... actually torch.cholesky(A, upper=True) returns U with A = U^T U.
-    Lu = jnp.linalg.cholesky(Hinv)          # Hinv = Lu Lu^T
-    return Lu.T                             # U = Lu^T  => Hinv = U^T U
+    if Hd.ndim == 3:
+        return jax.vmap(_cholesky_inverse_upper_2d)(Hd)
+    return _cholesky_inverse_upper_2d(Hd)
 
 
 def block_solver(Hd: jax.Array, c1: int, c2: int):

@@ -9,72 +9,53 @@ the paper assumes:
         that streams each named linear's inputs into its Hessian
         (eq. 9, ``H += X_bᵀX_b``) and keeps only the **last** batch's
         inputs resident (single-instance paradigm, eq. 11);
-     b. **stage 1** — GPTQ per linear from the damped Hessian (eq. 10);
-     c. **stage 2** — RPIQ refinement per linear from
-        ``(X_last, W_fp, H̃)`` (eq. 4–8, 12–14, 19–23);
-     d. **replace** the layer's weights with the refined on-grid values and
-        re-run the layer to **propagate quantized activations** to the next
-        layer (so later Hessians see the quantized network — GPTQ
-        semantics);
+     b. **plan** — :func:`repro.core.plan.build_plan` turns the captured
+        linears (dense taps AND stacked MoE expert slices) into a
+        :class:`~repro.core.plan.QuantPlan`: members grouped by
+        ``(shape, n_last, group_size, blocksize, bits, symmetric)``;
+     c. **execute** — each group runs through the *batched* executors
+        (``gptq_quantize_batched`` stage 1, eq. 10; ``rpiq_refine_batched``
+        stage 2, eq. 4–8, 12–14, 19–23): weights/Hessians/instances are
+        stacked on a leading axis and quantized in ONE dispatch per stage
+        per group instead of one per linear (``quant.batched_executor=False``
+        restores per-linear dispatch — same plan, singleton executors);
+     d. **scatter** the on-grid results back into the param tree and re-run
+        the layer to **propagate quantized activations** to the next layer
+        (so later Hessians see the quantized network — GPTQ semantics);
   3. MoE layers: the router/shared-expert linears tap normally; routed
      expert FFNs get **per-expert Hessians from their routed tokens** via
-     ``moe.dispatch`` (capacity-padded zero rows contribute nothing to
-     ``XᵀX``); experts that saw fewer than one group of tokens fall back
-     to RTN on their own grid (recorded in the report).
+     ``moe.dispatch``, accumulated as ONE stacked (E, d, d) HessianState
+     (capacity-padded zero rows contribute nothing to ``XᵀX``). All E
+     experts of a weight join the plan as one group of E stacked members —
+     w_gate and w_up even share a 2E-member group — and experts that saw
+     fewer than one group of tokens become an RTN fallback *mask inside
+     the group* (recorded in the report as before).
 
 Returns float params whose quantized linears hold *on-grid* values plus a
 ``QuantReport`` (per-linear Γ histories = paper Table 5 / Fig. 5) and a
-packer to int4 serving artifacts (QuantizedTensor leaves).
+packer to int4 serving artifacts (QuantizedTensor leaves). Stage timings
+are synchronized (``jax.block_until_ready``) so the report measures
+compute, not async dispatch.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import Config, QuantConfig
+from repro.config import Config
 from repro.core import hessian as hess
-from repro.core.gptq import gptq_quantize, rtn_quantize
+from repro.core import plan as qplan
+from repro.core.plan import (LinearRecord, MemberResult,  # noqa: F401
+                             PlanMember, QuantReport)
 from repro.core.quant import QuantizedTensor, pack_int4
-from repro.core.rpiq import rpiq_refine
-from repro.kernels import ops as kops
 from repro.models import transformer as T
 from repro.models import moe as moe_mod
 from repro.models.linear import Tap
 from repro.models.layers import embed, norm, sinusoidal_positions
-
-
-@dataclasses.dataclass
-class LinearRecord:
-    name: str
-    shape: Tuple[int, int]           # (out, in)
-    gptq_err: float
-    gamma: List[float]               # Γ trajectory (Γ[0] = post-stage-1)
-    gamma_final: float
-    iters: int
-    mode: str                        # "rpiq" | "rtn-fallback" | "skipped"
-    seconds: float
-
-
-@dataclasses.dataclass
-class QuantReport:
-    linears: List[LinearRecord] = dataclasses.field(default_factory=list)
-    seconds_total: float = 0.0
-    seconds_stage1: float = 0.0
-    seconds_stage2: float = 0.0
-    peak_resident_bytes: int = 0     # analytic single-instance residency
-
-    def summary(self) -> str:
-        n = len(self.linears)
-        improved = sum(1 for l in self.linears
-                       if l.gamma and l.gamma_final < l.gamma[0] * 0.999)
-        return (f"{n} linears quantized; stage2 improved {improved}; "
-                f"t={self.seconds_total:.1f}s "
-                f"(s1={self.seconds_stage1:.1f} s2={self.seconds_stage2:.1f})")
 
 
 def _resolve(tree: Dict, dotted: str):
@@ -82,130 +63,6 @@ def _resolve(tree: Dict, dotted: str):
     for part in dotted.split("."):
         node = node[part]
     return node
-
-
-def _quantize_linear(qc: QuantConfig, w_io: jax.Array,
-                     hstate: hess.HessianState, x_last: jax.Array,
-                     report: QuantReport, name: str,
-                     rpiq_enabled: bool = True,
-                     x_count: Optional[jax.Array] = None):
-    """Quantize one linear. w_io: (in, out) model weight.
-
-    Returns (w_io_quantized, (scales, zeros) | None) — the grid is carried
-    in the param tree so packing round-trips exactly.
-    """
-    t0 = time.perf_counter()
-    w_oi = jnp.asarray(w_io, jnp.float32).T
-    in_dim = w_oi.shape[1]
-    if in_dim % qc.blocksize != 0 or in_dim % qc.group_size != 0:
-        report.linears.append(LinearRecord(
-            name, tuple(w_oi.shape), 0.0, [], 0.0, 0, "skipped",
-            time.perf_counter() - t0))
-        return w_io, None
-    Hd = hess.damped(hstate, qc.percdamp)
-    u = hess.cholesky_inverse_upper(Hd)
-    res1 = gptq_quantize(w_oi, u, bits=qc.bits, group_size=qc.group_size,
-                         blocksize=qc.blocksize, symmetric=qc.symmetric)
-    t1 = time.perf_counter()
-    report.seconds_stage1 += t1 - t0
-    grid = (res1.scales, res1.zeros)
-    if not rpiq_enabled or qc.rpiq_iters <= 0:
-        report.linears.append(LinearRecord(
-            name, tuple(w_oi.shape), float(res1.err), [], 0.0, 0, "gptq",
-            t1 - t0))
-        return res1.w_q.T.astype(w_io.dtype), grid
-    x2 = x_last.reshape(-1, in_dim)
-    res2 = rpiq_refine(res1.w_q, w_oi, x2, Hd, res1.scales, res1.zeros,
-                       h_count=hstate.count, x_count=x_count, bits=qc.bits,
-                       group_size=qc.group_size, block_size=qc.blocksize,
-                       alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
-                       early_stop=qc.rpiq_early_stop,
-                       exact_gram=not qc.rpiq_use_global_hessian)
-    t2 = time.perf_counter()
-    report.seconds_stage2 += t2 - t1
-    gam = [float(g) for g in np.asarray(res2.loss_history)
-           if np.isfinite(g)]
-    report.linears.append(LinearRecord(
-        name, tuple(w_oi.shape), float(res1.err), gam,
-        float(res2.proj_loss), int(res2.iters_run), "rpiq", t2 - t0))
-    return res2.w_q.T.astype(w_io.dtype), grid
-
-
-def _quantize_moe_experts(cfg: Config, p_moe: Dict, xs: List[jax.Array],
-                          mc, report: QuantReport, name: str) -> Dict:
-    """Per-expert Hessians from routed tokens (paper's method per expert).
-
-    ``xs``: per-calibration-batch flat MoE block inputs (T, d), collected
-    from the router tap.
-    """
-    qc = cfg.quant
-    m = mc.moe
-    e = m.num_experts
-    d, f = p_moe["w_gate"].shape[1:]
-    # stream dispatch over batches: per-expert Hessians for gate/up (input d)
-    # and for down (input f, needs the expert mid activations).
-    H_in = [hess.init_hessian(d) for _ in range(e)]
-    H_mid = [hess.init_hessian(f) for _ in range(e)]
-    real_counts = np.zeros(e, np.int64)
-    x_last_in: Optional[jax.Array] = None
-    x_last_mid: Optional[jax.Array] = None
-    for bi, xt in enumerate(xs):
-        dsp = moe_mod.dispatch(mc, p_moe, xt.astype(jnp.dtype(mc.dtype)))
-        buf = dsp.buf                                   # (E, C, d)
-        g = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
-                       p_moe["w_gate"].astype(jnp.float32))
-        u = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
-                       p_moe["w_up"].astype(jnp.float32))
-        from repro.models.layers import _act
-        mid = _act(mc.act, g) * u                       # (E, C, f)
-        real_counts += np.asarray(dsp.counts, np.int64)
-        for ei in range(e):
-            H_in[ei] = hess.accumulate(H_in[ei], buf[ei])
-            H_mid[ei] = hess.accumulate(H_mid[ei], mid[ei])
-        if bi == len(xs) - 1:
-            x_last_in, x_last_mid = buf, mid
-
-    # zero-padded capacity rows contribute nothing to XᵀX; use real routed
-    # token counts for both the starvation check and the eq.-13 rescale.
-    H_in = [hess.HessianState(h.H, jnp.asarray(int(c), jnp.int32))
-            for h, c in zip(H_in, real_counts)]
-    H_mid = [hess.HessianState(h.H, jnp.asarray(int(c), jnp.int32))
-             for h, c in zip(H_mid, real_counts)]
-
-    new = dict(p_moe)
-    for wname, Hs, xl in (
-            ("w_gate", H_in, x_last_in),
-            ("w_up", H_in, x_last_in),
-            ("w_down", H_mid, x_last_mid)):
-        stacked, grids = [], []
-        for ei in range(e):
-            w_e = p_moe[wname][ei]                      # (in, out)
-            n_tok = int(Hs[ei].count)
-            if n_tok < qc.group_size:
-                # starved expert: RTN fallback on its own grid
-                gsz = (qc.group_size
-                       if w_e.shape[0] % qc.group_size == 0
-                       else w_e.shape[0])
-                res = rtn_quantize(jnp.asarray(w_e, jnp.float32).T,
-                                   bits=qc.bits, group_size=gsz)
-                stacked.append(res.w_q.T.astype(p_moe[wname].dtype))
-                grids.append((res.scales, res.zeros) if gsz ==
-                             qc.group_size else None)
-                report.linears.append(LinearRecord(
-                    f"{name}.{wname}[{ei}]", tuple(w_e.shape[::-1]),
-                    0.0, [], 0.0, 0, "rtn-fallback", 0.0))
-            else:
-                w_q, grid = _quantize_linear(
-                    qc, w_e, Hs[ei], xl[ei], report,
-                    f"{name}.{wname}[{ei}]",
-                    x_count=dsp.counts[ei].astype(jnp.int32))
-                stacked.append(w_q)
-                grids.append(grid)
-        new[wname] = jnp.stack(stacked)
-        if all(g is not None for g in grids):
-            new[f"{wname}_qscales"] = jnp.stack([g[0] for g in grids])
-            new[f"{wname}_qzeros"] = jnp.stack([g[1] for g in grids])
-    return new
 
 
 def _linear_names_in(tree: Dict, prefix: str = "") -> List[str]:
@@ -223,17 +80,89 @@ def _linear_names_in(tree: Dict, prefix: str = "") -> List[str]:
 
 
 _QUANT_SUBTREES = ("mixer", "mlp", "xattn")   # norms/embeds stay fp
+_MOE_WNAMES = ("w_gate", "w_up", "w_down")
+
+
+def _moe_members(cfg: Config, p_moe: Dict, xs: List[jax.Array],
+                 name: str) -> List[PlanMember]:
+    """Plan members for the routed experts (paper's method per expert).
+
+    ``xs``: per-calibration-batch flat MoE block inputs (T, d), collected
+    from the router tap. Per-expert Hessians accumulate as one stacked
+    (E, ·, ·) state per input kind — no per-expert Python loop; the
+    starved-expert check becomes a flag the executor applies as a mask.
+    """
+    qc = cfg.quant
+    mc = cfg.model
+    e = mc.moe.num_experts
+    d, f = p_moe["w_gate"].shape[1:]
+    # stream dispatch over batches: stacked per-expert Hessians for gate/up
+    # (input d) and for down (input f, needs the expert mid activations).
+    H_in = hess.init_hessian(d, batch=e)
+    H_mid = hess.init_hessian(f, batch=e)
+    real_counts = np.zeros(e, np.int64)
+    x_last_in: Optional[jax.Array] = None
+    x_last_mid: Optional[jax.Array] = None
+    last_counts: Optional[jax.Array] = None
+    for bi, xt in enumerate(xs):
+        dsp = moe_mod.dispatch(mc, p_moe, xt.astype(jnp.dtype(mc.dtype)))
+        buf = dsp.buf                                   # (E, C, d)
+        g = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                       p_moe["w_gate"].astype(jnp.float32))
+        u = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                       p_moe["w_up"].astype(jnp.float32))
+        from repro.models.layers import _act
+        mid = _act(mc.act, g) * u                       # (E, C, f)
+        real_counts += np.asarray(dsp.counts, np.int64)
+        H_in = hess.accumulate(H_in, buf)
+        H_mid = hess.accumulate(H_mid, mid)
+        if bi == len(xs) - 1:
+            x_last_in, x_last_mid = buf, mid
+            last_counts = dsp.counts
+
+    members: List[PlanMember] = []
+    for wname, Hst, xl in (("w_gate", H_in, x_last_in),
+                           ("w_up", H_in, x_last_in),
+                           ("w_down", H_mid, x_last_mid)):
+        # zero-padded capacity rows contribute nothing to XᵀX; real routed
+        # token counts drive both the starvation check and the eq.-13
+        # rescale. One stacked member per weight: the expert axis stays a
+        # whole (E, ·, ·) slab from capture through scatter.
+        members.append(PlanMember(
+            f"{name}.{wname}",
+            jnp.swapaxes(jnp.asarray(p_moe[wname], jnp.float32), -1, -2),
+            hess.HessianState(Hst.H,
+                              jnp.asarray(real_counts, jnp.int32)),
+            xl, x_count=last_counts.astype(jnp.int32),
+            starved=real_counts < qc.group_size,
+            names=[f"{name}.{wname}[{ei}]" for ei in range(e)]))
+    return members
+
+
+def _scatter_moe(p_moe: Dict, results: Dict[str, MemberResult],
+                 name: str) -> Dict:
+    """Reassemble stacked expert weights (+grids) from member results."""
+    new = dict(p_moe)
+    for wname in _MOE_WNAMES:
+        res = results[f"{name}.{wname}"]
+        if res.w_q is None:                             # skipped (unaligned)
+            continue
+        new[wname] = jnp.swapaxes(res.w_q, -1, -2).astype(
+            p_moe[wname].dtype)
+        if res.grid is not None:
+            new[f"{wname}_qscales"] = res.grid[0]
+            new[f"{wname}_qzeros"] = res.grid[1]
+    return new
 
 
 def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
                    apply_fn, report: QuantReport) -> Tuple[Dict, List]:
-    """Quantize one layer's linears, then propagate quantized outputs.
+    """Quantize one layer's linears via the plan, then propagate.
 
     ``apply_fn(params, h, batch_index) -> h_out`` runs the layer eagerly.
     Returns (new_layer_params, new_hs).
     """
     qc = cfg.quant
-    mc = cfg.model
     is_moe = "mlp" in layer_params and "w_gate" in layer_params.get("mlp", {})
     # 1. capture: stream Hessians, keep last batch inputs
     hessians: Dict[str, hess.HessianState] = {}
@@ -265,21 +194,33 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
         with Tap(on_record=on_record):
             apply_fn(layer_params, h, bi)
 
-    # 2/3. quantize each captured linear (stage 1 + stage 2)
+    # 2. plan: dense taps + stacked MoE expert slices as uniform members
     new_params = jax.tree_util.tree_map(lambda x: x, layer_params)
-    for name in sorted(hessians.keys()):
+    members: List[PlanMember] = []
+    dense_names = sorted(hessians.keys())
+    for name in dense_names:
         node = _resolve(new_params, name)
-        node["w"], grid = _quantize_linear(qc, node["w"], hessians[name],
-                                           last_x[name], report, name)
-        if grid is not None:
-            # stage-1 grid travels with the weight → exact int4 packing
-            node["qscales"], node["qzeros"] = grid
-
-    # MoE routed experts (stacked einsums, not dense() taps)
+        members.append(PlanMember(
+            name, jnp.asarray(node["w"], jnp.float32).T, hessians[name],
+            last_x[name], x_count=None))
     if is_moe:
         assert len(moe_xs) == len(hs), "router tap missed batches"
-        new_params["mlp"] = _quantize_moe_experts(
-            cfg, new_params["mlp"], moe_xs, mc, report, "mlp")
+        members.extend(_moe_members(cfg, new_params["mlp"], moe_xs, "mlp"))
+    plan = qplan.build_plan(qc, members)
+
+    # 3. execute groups (batched GPTQ + RPIQ) and scatter back
+    results = qplan.execute_plan(qc, plan, report)
+    for name in dense_names:
+        res = results[name]
+        if res.w_q is None:
+            continue                                    # skipped: keep fp
+        node = _resolve(new_params, name)
+        node["w"] = res.w_q.T.astype(node["w"].dtype)
+        if res.grid is not None:
+            # stage-1 grid travels with the weight → exact int4 packing
+            node["qscales"], node["qzeros"] = res.grid
+    if is_moe:
+        new_params["mlp"] = _scatter_moe(new_params["mlp"], results, "mlp")
 
     # 4. propagate quantized activations
     new_hs = [apply_fn(new_params, h, bi) for bi, h in enumerate(hs)]
@@ -295,11 +236,9 @@ def quantize_model(cfg: Config, params: Dict,
     is the single instance for stage 2.
     """
     t_start = time.perf_counter()
-    mc = cfg.model
     report = QuantReport()
-    dtype = jnp.dtype(mc.dtype)
 
-    if mc.is_encoder_decoder:
+    if cfg.model.is_encoder_decoder:
         out = _quantize_encdec(cfg, params, calib, report, verbose)
     else:
         out = _quantize_decoder_only(cfg, params, calib, report, verbose)
@@ -341,7 +280,6 @@ def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
                 new_elem[f"sub{s_i}"] = lp_new
                 li += 1
                 if verbose:
-                    last = report.linears[-1] if report.linears else None
                     print(f"  layer {li}: {report.summary()}")
             elems.append(new_elem)
         new_blocks.append(T._stack_trees(elems))

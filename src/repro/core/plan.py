@@ -1,0 +1,456 @@
+"""Declarative quantization plan: group same-shape linears, execute batched.
+
+The pipeline's capture pass produces one :class:`PlanMember` per linear
+(dense taps and stacked MoE expert slices alike). :func:`build_plan` groups
+members by ``(out, in, n_last, group_size, blocksize, bits, symmetric)`` —
+everything that determines a jit cache entry — and :func:`execute_plan`
+hands each group to the **batched executors**
+(:func:`repro.core.gptq.gptq_quantize_batched`,
+:func:`repro.core.rpiq.rpiq_refine_batched`): the group's weights,
+Hessians, grids and last-instance activations are stacked on a leading
+axis and quantized in ONE dispatch per stage instead of one per linear.
+
+Why this matters: the paper's headline claim is quantization *throughput*
+(single-instance calibration exists to make 4-bit compression cheap on
+assistive devices). A transformer layer typically holds ≥4 identically
+shaped linears (q/k/v/o) and an MoE layer holds E× identically shaped
+expert slices; per-linear dispatch pays trace/dispatch overhead B times
+and leaves the accelerator underfilled at small widths. Grouping makes the
+cost one compile + one dispatch per *shape class*, with every inner op B×
+wider.
+
+MoE starved experts (fewer routed tokens than one quant group) stay inside
+their group as a **mask**: the batched RTN fallback is computed for the
+whole stack (row-wise, nearly free) and selected per member with
+``jnp.where`` — no per-expert Python loop. Members whose input dim doesn't
+align to the grid are carried on a per-member fallback list (skip, or
+full-row RTN for starved experts), exactly the legacy semantics.
+
+``execute_plan(..., batched=False)`` runs the same plan through the
+singleton executors (one dispatch per linear) — the pre-plan reference
+path kept for parity tests and the table4 per-linear-vs-batched benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import QuantConfig
+from repro.core import hessian as hess
+from repro.core.gptq import (gptq_quantize, gptq_quantize_batched,
+                             rtn_quantize, rtn_quantize_batched)
+from repro.core.rpiq import rpiq_refine, rpiq_refine_batched
+
+
+# ---------------------------------------------------------------------------
+# Report records (schema consumed by benchmarks/tables — do not change)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LinearRecord:
+    name: str
+    shape: Tuple[int, int]           # (out, in)
+    gptq_err: float
+    gamma: List[float]               # Γ trajectory (Γ[0] = post-stage-1)
+    gamma_final: float
+    iters: int
+    mode: str                        # "rpiq" | "gptq" | "rtn-fallback" | "skipped"
+    seconds: float
+
+
+@dataclasses.dataclass
+class QuantReport:
+    linears: List[LinearRecord] = dataclasses.field(default_factory=list)
+    seconds_total: float = 0.0
+    seconds_stage1: float = 0.0
+    seconds_stage2: float = 0.0
+    peak_resident_bytes: int = 0     # analytic single-instance residency
+
+    def summary(self) -> str:
+        n = len(self.linears)
+        improved = sum(1 for l in self.linears
+                       if l.gamma and l.gamma_final < l.gamma[0] * 0.999)
+        return (f"{n} linears quantized; stage2 improved {improved}; "
+                f"t={self.seconds_total:.1f}s "
+                f"(s1={self.seconds_stage1:.1f} s2={self.seconds_stage2:.1f})")
+
+
+# ---------------------------------------------------------------------------
+# Plan structure
+# ---------------------------------------------------------------------------
+
+GroupKey = Tuple[int, int, int, int, int, int, bool]
+# (out, in, n_last, group_size, blocksize, bits, symmetric)
+
+
+@dataclasses.dataclass
+class PlanMember:
+    """One linear — or a pre-stacked slab of S same-shape linears.
+
+    Singleton (``names is None``): w_oi (out, in), hessian (in, in),
+    x_last (n, in), x_count scalar, starved bool.
+
+    Stacked (``names`` lists the S per-slice report names, e.g. one per
+    MoE expert): w_oi (S, out, in), hessian (S, in, in)/(S,), x_last
+    (S, n, in), x_count (S,), starved bool or (S,) mask. Stacked members
+    flow capture → plan → executor → scatter as whole arrays — no
+    per-expert device slicing anywhere on the batched path.
+    """
+    name: str
+    w_oi: jax.Array                  # (out, in) | (S, out, in) float32
+    hessian: hess.HessianState       # (in, in) | stacked (S, in, in)
+    x_last: jax.Array                # (n, in) | (S, n, in) inputs
+    x_count: Optional[jax.Array]     # () | (S,) int32 real rows in x_last
+    #                                  (None ⇒ all n rows are real)
+    starved: Any = False             # bool | (S,) mask: below one quant
+    #                                  group of tokens → RTN fallback
+    names: Optional[List[str]] = None  # per-slice names when stacked
+
+    @property
+    def stacked(self) -> bool:
+        return self.names is not None
+
+    @property
+    def lanes(self) -> int:
+        return len(self.names) if self.stacked else 1
+
+    @property
+    def lane_names(self) -> List[str]:
+        return self.names if self.stacked else [self.name]
+
+    @property
+    def wshape(self) -> Tuple[int, int]:
+        return tuple(self.w_oi.shape[-2:])
+
+    def starved_mask(self) -> np.ndarray:
+        s = np.asarray(self.starved, bool).reshape(-1)
+        return np.full(self.lanes, bool(s[0])) if s.size == 1 else s
+
+
+@dataclasses.dataclass
+class QuantGroup:
+    key: GroupKey
+    members: List[PlanMember]
+
+
+@dataclasses.dataclass
+class QuantPlan:
+    groups: List[QuantGroup]         # batched-executable, grid-aligned
+    fallbacks: List[PlanMember]      # in % group/blocksize ≠ 0: skip or
+    #                                  full-row RTN (starved)
+
+    @property
+    def n_members(self) -> int:
+        return sum(len(g.members) for g in self.groups) + len(self.fallbacks)
+
+
+@dataclasses.dataclass
+class MemberResult:
+    """Per-member outcome, keyed back to the param tree by ``name``.
+
+    Stacked members return stacked arrays: w_q (S, out, in) and grid
+    (S, out, groups) — the scatter assigns them wholesale.
+    """
+    name: str
+    w_q: Optional[jax.Array]         # (out, in)|(S, out, in); None = skipped
+    grid: Optional[Tuple[jax.Array, jax.Array]]   # stage-1 (scales, zeros)
+
+
+def build_plan(qc: QuantConfig, members: List[PlanMember]) -> QuantPlan:
+    """Group members by jit-cache identity; order inside a group is the
+    member submission order (stable), so scatter-back is positional."""
+    groups: Dict[GroupKey, List[PlanMember]] = {}
+    fallbacks: List[PlanMember] = []
+    for m in members:
+        out_dim, in_dim = m.wshape
+        if in_dim % qc.blocksize != 0 or in_dim % qc.group_size != 0:
+            fallbacks.append(m)
+            continue
+        key: GroupKey = (out_dim, in_dim, int(m.x_last.shape[-2]),
+                         qc.group_size, qc.blocksize, qc.bits, qc.symmetric)
+        groups.setdefault(key, []).append(m)
+    return QuantPlan([QuantGroup(k, v) for k, v in groups.items()],
+                     fallbacks)
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+def _gamma_list(hist_row: np.ndarray) -> List[float]:
+    return [float(g) for g in hist_row if np.isfinite(g)]
+
+
+def _as3d(a: jax.Array) -> jax.Array:
+    return a if a.ndim == 3 else a[None]
+
+
+def _lane_x_counts(m: PlanMember) -> jax.Array:
+    """(S,) int32 real-row counts; starved lanes report n (see below)."""
+    n = m.x_last.shape[-2]
+    if m.x_count is None:
+        xc = jnp.full((m.lanes,), n, jnp.int32)
+    else:
+        xc = jnp.asarray(m.x_count, jnp.int32).reshape(-1)
+        if xc.shape[0] != m.lanes:
+            xc = jnp.broadcast_to(xc, (m.lanes,))
+    # starved lanes pair with the identity curvature below: x_count = n
+    # keeps the eq.-13 rescale at 1 instead of zeroing it
+    return jnp.where(jnp.asarray(m.starved_mask()), n, xc)
+
+
+def _lane_hessians(m: PlanMember) -> hess.HessianState:
+    """(S, in, in) curvature block fed to the batched lanes.
+
+    Starved lanes are masked to RTN afterwards, but they still *execute*
+    GPTQ/RPIQ under vmap; a zero-token expert has H = 0 and x_count = 0,
+    whose Cholesky is NaN — and a NaN Γ never satisfies the early-stop
+    predicate, pinning the whole group's while_loop at t_max. Feed those
+    lanes an identity Hessian (count = n) so they converge immediately;
+    the mask discards their output either way.
+    """
+    H = _as3d(m.hessian.H)
+    count = jnp.asarray(m.hessian.count, jnp.int32).reshape(-1)
+    sv = m.starved_mask()
+    if sv.any():
+        svj = jnp.asarray(sv)
+        n = m.x_last.shape[-2]
+        eye = jnp.eye(H.shape[-1], dtype=jnp.float32)
+        H = jnp.where(svj[:, None, None], eye, H)
+        count = jnp.where(svj, n, count)
+    return hess.HessianState(H, count)
+
+
+@jax.jit
+def _damped_cholesky(H: jax.Array, percdamp: jax.Array):
+    """Fused H̃ + upper-Cholesky-of-inverse for a stacked group (one
+    dispatch instead of ~10 eager ops per group)."""
+    hd = hess.damped(hess.HessianState(H, None), percdamp)
+    return hd, hess.cholesky_inverse_upper(hd)
+
+
+def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
+                           report: QuantReport, rpiq_enabled: bool
+                           ) -> List[MemberResult]:
+    """One stacked dispatch per stage for the whole group.
+
+    Members concatenate on the lane axis — a stacked member (e.g. E MoE
+    experts) contributes its slab wholesale, so lane count is
+    Σ member.lanes while the host-side work stays O(#members).
+    """
+    ms = group.members
+    t0 = time.perf_counter()
+    w = jnp.concatenate([_as3d(jnp.asarray(m.w_oi, jnp.float32))
+                         for m in ms])
+    hs_lanes = [_lane_hessians(m) for m in ms]
+    st = hess.HessianState(jnp.concatenate([h.H for h in hs_lanes]),
+                           jnp.concatenate([h.count for h in hs_lanes]))
+    hd, u = _damped_cholesky(st.H, jnp.float32(qc.percdamp))
+    res1 = gptq_quantize_batched(w, u, bits=qc.bits,
+                                 group_size=qc.group_size,
+                                 blocksize=qc.blocksize,
+                                 symmetric=qc.symmetric)
+    starved = np.concatenate([m.starved_mask() for m in ms])
+    rtn = None
+    if starved.any():
+        rtn = rtn_quantize_batched(w, bits=qc.bits, group_size=qc.group_size,
+                                   symmetric=qc.symmetric)
+    jax.block_until_ready(res1.w_q)
+    t1 = time.perf_counter()
+    report.seconds_stage1 += t1 - t0
+
+    do_rpiq = rpiq_enabled and qc.rpiq_iters > 0
+    res2 = None
+    if do_rpiq:
+        x = jnp.concatenate([_as3d(jnp.asarray(m.x_last, jnp.float32))
+                             for m in ms])
+        xc = jnp.concatenate([_lane_x_counts(m) for m in ms])
+        res2 = rpiq_refine_batched(
+            res1.w_q, w, x, hd, res1.scales, res1.zeros,
+            h_count=st.count, x_count=xc, bits=qc.bits,
+            group_size=qc.group_size, block_size=qc.blocksize,
+            alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
+            early_stop=qc.rpiq_early_stop,
+            exact_gram=not qc.rpiq_use_global_hessian)
+        jax.block_until_ready(res2.w_q)
+        t2 = time.perf_counter()
+        report.seconds_stage2 += t2 - t1
+
+    # starved-expert mask: select the RTN lane (weights AND grid)
+    w_final = res2.w_q if do_rpiq else res1.w_q
+    scales, zeros = res1.scales, res1.zeros
+    if rtn is not None:
+        sel = jnp.asarray(starved)[:, None, None]
+        w_final = jnp.where(sel, rtn.w_q, w_final)
+        scales = jnp.where(sel, rtn.scales, scales)
+        zeros = jnp.where(sel, rtn.zeros, zeros)
+
+    seconds = (time.perf_counter() - t0) / max(1, int((~starved).sum()))
+    err1 = np.asarray(res1.err)
+    hist = np.asarray(res2.loss_history) if res2 is not None else None
+    ploss = np.asarray(res2.proj_loss) if res2 is not None else None
+    iters = np.asarray(res2.iters_run) if res2 is not None else None
+
+    results = []
+    off = 0
+    for m in ms:
+        shape = m.wshape
+        for li, lname in enumerate(m.lane_names):
+            i = off + li
+            if starved[i]:
+                report.linears.append(LinearRecord(
+                    lname, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+            elif do_rpiq:
+                report.linears.append(LinearRecord(
+                    lname, shape, float(err1[i]), _gamma_list(hist[i]),
+                    float(ploss[i]), int(iters[i]), "rpiq", seconds))
+            else:
+                report.linears.append(LinearRecord(
+                    lname, shape, float(err1[i]), [], 0.0, 0, "gptq",
+                    seconds))
+        sl = slice(off, off + m.lanes)
+        if m.stacked:
+            results.append(MemberResult(m.name, w_final[sl],
+                                        (scales[sl], zeros[sl])))
+        else:
+            results.append(MemberResult(m.name, w_final[off],
+                                        (scales[off], zeros[off])))
+        off += m.lanes
+    return results
+
+
+def _lane_view(m: PlanMember, li: int) -> "PlanMember":
+    """Singleton view of one lane of a stacked member (legacy path only)."""
+    if not m.stacked:
+        return m
+    xc = None if m.x_count is None else \
+        jnp.asarray(m.x_count, jnp.int32).reshape(-1)[li]
+    return PlanMember(m.lane_names[li], m.w_oi[li],
+                      hess.HessianState(m.hessian.H[li],
+                                        jnp.asarray(m.hessian.count,
+                                                    jnp.int32
+                                                    ).reshape(-1)[li]),
+                      m.x_last[li], x_count=xc,
+                      starved=bool(m.starved_mask()[li]))
+
+
+def _execute_member_singleton(qc: QuantConfig, m: PlanMember,
+                              report: QuantReport, rpiq_enabled: bool
+                              ) -> MemberResult:
+    """Legacy per-linear path: one dispatch per lane, per stage."""
+    if m.stacked:
+        parts = [_execute_member_singleton(qc, _lane_view(m, li), report,
+                                           rpiq_enabled)
+                 for li in range(m.lanes)]
+        return MemberResult(m.name,
+                            jnp.stack([p.w_q for p in parts]),
+                            (jnp.stack([p.grid[0] for p in parts]),
+                             jnp.stack([p.grid[1] for p in parts])))
+    shape = m.wshape
+    if m.starved:
+        res = rtn_quantize(jnp.asarray(m.w_oi, jnp.float32), bits=qc.bits,
+                           group_size=qc.group_size, symmetric=qc.symmetric)
+        report.linears.append(LinearRecord(
+            m.name, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+        return MemberResult(m.name, res.w_q, (res.scales, res.zeros))
+    t0 = time.perf_counter()
+    w_oi = jnp.asarray(m.w_oi, jnp.float32)
+    hd = hess.damped(m.hessian, qc.percdamp)
+    u = hess.cholesky_inverse_upper(hd)
+    res1 = gptq_quantize(w_oi, u, bits=qc.bits, group_size=qc.group_size,
+                         blocksize=qc.blocksize, symmetric=qc.symmetric)
+    jax.block_until_ready(res1.w_q)
+    t1 = time.perf_counter()
+    report.seconds_stage1 += t1 - t0
+    grid = (res1.scales, res1.zeros)
+    if not rpiq_enabled or qc.rpiq_iters <= 0:
+        report.linears.append(LinearRecord(
+            m.name, shape, float(res1.err), [], 0.0, 0, "gptq", t1 - t0))
+        return MemberResult(m.name, res1.w_q, grid)
+    res2 = rpiq_refine(res1.w_q, w_oi, jnp.asarray(m.x_last, jnp.float32),
+                       hd, res1.scales, res1.zeros,
+                       h_count=m.hessian.count, x_count=m.x_count,
+                       bits=qc.bits, group_size=qc.group_size,
+                       block_size=qc.blocksize, alpha=qc.rpiq_alpha,
+                       t_max=qc.rpiq_iters, early_stop=qc.rpiq_early_stop,
+                       exact_gram=not qc.rpiq_use_global_hessian)
+    jax.block_until_ready(res2.w_q)
+    t2 = time.perf_counter()
+    report.seconds_stage2 += t2 - t1
+    report.linears.append(LinearRecord(
+        m.name, shape, float(res1.err), _gamma_list(np.asarray(
+            res2.loss_history)), float(res2.proj_loss),
+        int(res2.iters_run), "rpiq", t2 - t0))
+    return MemberResult(m.name, res2.w_q, grid)
+
+
+def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport
+                      ) -> MemberResult:
+    """Blocksize/grid-unaligned member: RTN for starved lanes, else skip.
+
+    A starved expert still gets the per-group grid when its input dim
+    aligns to ``group_size`` (only GPTQ/RPIQ need ``blocksize``
+    alignment); otherwise one full-row group, no stored grid. A stacked
+    member mixes per-lane outcomes via the mask; its grid is stored only
+    when every lane produced one (all-starved + aligned).
+    """
+    shape = m.wshape
+    aligned = shape[1] % qc.group_size == 0
+    gsz = qc.group_size if aligned else shape[1]
+    sv = m.starved_mask()
+    if not m.stacked:
+        if m.starved:
+            res = rtn_quantize(jnp.asarray(m.w_oi, jnp.float32),
+                               bits=qc.bits, group_size=gsz,
+                               symmetric=qc.symmetric)
+            report.linears.append(LinearRecord(
+                m.name, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+            return MemberResult(m.name, res.w_q,
+                                (res.scales, res.zeros) if aligned else None)
+        report.linears.append(LinearRecord(
+            m.name, shape, 0.0, [], 0.0, 0, "skipped", 0.0))
+        return MemberResult(m.name, None, None)
+    for li, lname in enumerate(m.lane_names):
+        report.linears.append(LinearRecord(
+            lname, shape, 0.0, [], 0.0, 0,
+            "rtn-fallback" if sv[li] else "skipped", 0.0))
+    if not sv.any():
+        return MemberResult(m.name, None, None)
+    w = jnp.asarray(m.w_oi, jnp.float32)
+    res = rtn_quantize_batched(w, bits=qc.bits, group_size=gsz,
+                               symmetric=qc.symmetric)
+    svj = jnp.asarray(sv)[:, None, None]
+    w_q = jnp.where(svj, res.w_q, w)              # skipped lanes keep fp
+    grid = ((res.scales, res.zeros)
+            if aligned and bool(sv.all()) else None)
+    return MemberResult(m.name, w_q, grid)
+
+
+def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
+                 rpiq_enabled: bool = True,
+                 batched: Optional[bool] = None) -> Dict[str, MemberResult]:
+    """Run every group + fallback; returns {member name → MemberResult}.
+
+    ``batched=None`` reads ``qc.batched_executor``; ``False`` forces the
+    legacy per-linear dispatch (parity tests, table4 baseline).
+    """
+    if batched is None:
+        batched = qc.batched_executor
+    out: Dict[str, MemberResult] = {}
+    for group in plan.groups:
+        if batched:
+            results = _execute_group_batched(qc, group, report, rpiq_enabled)
+        else:
+            results = [_execute_member_singleton(qc, m, report, rpiq_enabled)
+                       for m in group.members]
+        for r in results:
+            out[r.name] = r
+    for m in plan.fallbacks:
+        r = _execute_fallback(qc, m, report)
+        out[r.name] = r
+    return out

@@ -63,17 +63,13 @@ def _project_block(b: jax.Array, scales: jax.Array, zeros: jax.Array,
     return (q - z) * s
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "bits", "group_size", "block_size", "t_max", "early_stop", "exact_gram"))
-def rpiq_refine(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
-                h_damped: jax.Array, scales: jax.Array, zeros: jax.Array, *,
-                h_count: jax.Array | None = None,
-                x_count: jax.Array | None = None,
-                bits: int = 4, group_size: int = 128, block_size: int = 128,
-                alpha: float = 0.01, t_max: int = 5,
-                early_stop: bool = True,
-                exact_gram: bool = False) -> RPIQResult:
-    """Stage-2 refinement for one linear layer.
+def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
+               h_damped: jax.Array, scales: jax.Array, zeros: jax.Array,
+               h_count: jax.Array | None, x_count: jax.Array | None, *,
+               bits: int, group_size: int, block_size: int, alpha: float,
+               t_max: int, early_stop: bool,
+               exact_gram: bool) -> RPIQResult:
+    """Single-linear RPIQ body — traceable, vmappable (see batched entry).
 
     w_init:   (out, in) stage-1 dequantized weights (on-grid)
     w_fp:     (out, in) full-precision weights (defines Y_orig)
@@ -158,55 +154,100 @@ def rpiq_refine(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
         q = jnp.clip(jnp.round(w / s) + z, 0.0, qmax)
         return (q - z) * s
 
-    def gs_round(t, carry):
+    def sweep_block(i, bc):
+        w, y_q = bc
+        c1 = i * block_size
+        b_old = jax.lax.dynamic_slice(w, (0, c1), (out_dim, block_size))
+        x_i = x_blocks[i]                               # (n, bs)
+        y_qi = x_i @ b_old.T                            # (n, out)
+        d_i = y_orig - (y_q - y_qi)                     # eq. 4/20
+        rhs = x_i.T @ d_i                               # (bs, out)
+        b_star = jax.scipy.linalg.cho_solve(
+            (chol[i], True), rhs).T                     # (out, bs) eq. 14
+        b_proj = _project_block(b_star, s_blocks[i], z_blocks[i],
+                                bits, group_size)       # eq. 7
+        b_new = b_old + alpha * (b_proj - b_old)        # eq. 8
+        y_q = y_q - y_qi + x_i @ b_new.T                # eq. 21–22
+        w = jax.lax.dynamic_update_slice(w, b_new, (0, c1))
+        return w, y_q
+
+    # while (not fori+cond-skip): post-early-stop rounds were carry-
+    # preserving no-ops, and under vmap a lax.cond lowers to select — both
+    # branches execute — so the batched executor would otherwise burn all
+    # t_max Gauss–Seidel rounds on every lane; the loop instead terminates
+    # as soon as every lane has stopped.
+    def gs_cond(carry):
+        _, _, _, _, _, done, t = carry
+        return jnp.logical_and(t < t_max, jnp.logical_not(done))
+
+    def gs_round(carry):
         """One Gauss–Seidel sweep over all blocks (eq. 19–22)."""
-        w, y_q, best_w, best_loss, hist, done, iters = carry
-
-        def sweep_block(i, bc):
-            w, y_q = bc
-            c1 = i * block_size
-            b_old = jax.lax.dynamic_slice(w, (0, c1), (out_dim, block_size))
-            x_i = x_blocks[i]                               # (n, bs)
-            y_qi = x_i @ b_old.T                            # (n, out)
-            d_i = y_orig - (y_q - y_qi)                     # eq. 4/20
-            rhs = x_i.T @ d_i                               # (bs, out)
-            b_star = jax.scipy.linalg.cho_solve(
-                (chol[i], True), rhs).T                     # (out, bs) eq. 14
-            b_proj = _project_block(b_star, s_blocks[i], z_blocks[i],
-                                    bits, group_size)       # eq. 7
-            b_new = b_old + alpha * (b_proj - b_old)        # eq. 8
-            y_q = y_q - y_qi + x_i @ b_new.T                # eq. 21–22
-            w = jax.lax.dynamic_update_slice(w, b_new, (0, c1))
-            return w, y_q
-
-        def run(args):
-            w, y_q, best_w, best_loss, hist, iters = args
-            w, y_q = jax.lax.fori_loop(0, n_blocks, sweep_block, (w, y_q))
-            gamma = jnp.sum((y_orig - y_q) ** 2)            # eq. 23
-            hist = hist.at[t + 1].set(gamma)
-            # candidate: full projection of the continuous iterate
-            w_proj = _project_full(w)
-            ploss = loss_of(w_proj)
-            improve = ploss < best_loss
-            best_w = jnp.where(improve, w_proj, best_w)
-            best_loss = jnp.where(improve, ploss, best_loss)
-            # early stop: Γ stopped decreasing vs the previous round
-            stop = jnp.logical_and(
-                jnp.asarray(early_stop), gamma >= hist[t] * (1.0 - 1e-6))
-            return w, y_q, best_w, best_loss, hist, stop, iters + 1
-
-        def skip(args):
-            w, y_q, best_w, best_loss, hist, iters = args
-            return w, y_q, best_w, best_loss, hist, jnp.asarray(True), iters
-
-        w, y_q, best_w, best_loss, hist, done, iters = jax.lax.cond(
-            done, skip, run, (w, y_q, best_w, best_loss, hist, iters))
-        return w, y_q, best_w, best_loss, hist, done, iters
+        w, y_q, best_w, best_loss, hist, done, t = carry
+        w, y_q = jax.lax.fori_loop(0, n_blocks, sweep_block, (w, y_q))
+        gamma = jnp.sum((y_orig - y_q) ** 2)            # eq. 23
+        hist = hist.at[t + 1].set(gamma)
+        # candidate: full projection of the continuous iterate
+        w_proj = _project_full(w)
+        ploss = loss_of(w_proj)
+        improve = ploss < best_loss
+        best_w = jnp.where(improve, w_proj, best_w)
+        best_loss = jnp.where(improve, ploss, best_loss)
+        # early stop: Γ stopped decreasing vs the previous round
+        stop = jnp.logical_and(
+            jnp.asarray(early_stop), gamma >= hist[t] * (1.0 - 1e-6))
+        return w, y_q, best_w, best_loss, hist, stop, t + 1
 
     hist0 = jnp.full((t_max + 1,), jnp.inf, jnp.float32).at[0].set(gamma0)
     y_q0 = x @ w0.T
     carry = (w0, y_q0, w0, gamma0, hist0, jnp.asarray(False),
              jnp.zeros((), jnp.int32))
-    w, y_q, best_w, best_loss, hist, done, iters = jax.lax.fori_loop(
-        0, t_max, gs_round, carry)
+    w, y_q, best_w, best_loss, hist, done, iters = jax.lax.while_loop(
+        gs_cond, gs_round, carry)
     return RPIQResult(best_w, w, hist, best_loss, iters)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "block_size", "t_max", "early_stop", "exact_gram"))
+def rpiq_refine(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
+                h_damped: jax.Array, scales: jax.Array, zeros: jax.Array, *,
+                h_count: jax.Array | None = None,
+                x_count: jax.Array | None = None,
+                bits: int = 4, group_size: int = 128, block_size: int = 128,
+                alpha: float = 0.01, t_max: int = 5,
+                early_stop: bool = True,
+                exact_gram: bool = False) -> RPIQResult:
+    """Stage-2 refinement for one linear layer (see :func:`_rpiq_core`)."""
+    return _rpiq_core(w_init, w_fp, x_last, h_damped, scales, zeros,
+                      h_count, x_count, bits=bits, group_size=group_size,
+                      block_size=block_size, alpha=alpha, t_max=t_max,
+                      early_stop=early_stop, exact_gram=exact_gram)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "block_size", "t_max", "early_stop", "exact_gram"))
+def rpiq_refine_batched(w_init: jax.Array, w_fp: jax.Array,
+                        x_last: jax.Array, h_damped: jax.Array,
+                        scales: jax.Array, zeros: jax.Array, *,
+                        h_count: jax.Array | None = None,
+                        x_count: jax.Array | None = None,
+                        bits: int = 4, group_size: int = 128,
+                        block_size: int = 128, alpha: float = 0.01,
+                        t_max: int = 5, early_stop: bool = True,
+                        exact_gram: bool = False) -> RPIQResult:
+    """vmapped stage-2 over a stacked leading axis (one group dispatch).
+
+    Array args gain a leading (B,) axis: w_init/w_fp (B, out, in), x_last
+    (B, n, in), h_damped (B, in, in), scales/zeros (B, out, groups);
+    h_count/x_count are (B,) or None. Every member runs its own early-stop
+    lane (``iters_run`` stays per-member); the RPIQResult fields carry the
+    stacked axis. One jit cache entry per group instead of per linear.
+    """
+    assert w_init.ndim == 3, w_init.shape
+    fn = functools.partial(_rpiq_core, bits=bits, group_size=group_size,
+                           block_size=block_size, alpha=alpha, t_max=t_max,
+                           early_stop=early_stop, exact_gram=exact_gram)
+    in_axes = (0, 0, 0, 0, 0, 0,
+               None if h_count is None else 0,
+               None if x_count is None else 0)
+    return jax.vmap(fn, in_axes=in_axes)(w_init, w_fp, x_last, h_damped,
+                                         scales, zeros, h_count, x_count)
