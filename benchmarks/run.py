@@ -1,10 +1,15 @@
 """Benchmark driver: one module per paper table + the roofline summary.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 table2 ...]
+    PYTHONPATH=src python -m benchmarks.run [table1 table2 ...] [--tiny]
 
 Writes artifacts/bench/<table>.json and prints a flat CSV-ish summary.
-Set REPRO_BENCH_STEPS to raise the training budget (default keeps the whole
-suite a few CPU-minutes)."""
+``--tiny`` shrinks table4 to a CI smoke (single config, fewer repeats —
+scripts/check.sh runs it). A FULL table4 run additionally rewrites the
+stable machine-trackable ``BENCH_table4.json`` at the repo root — flat rows of
+``{config, impl, cold_s, warm_s, executor_s, xla_ops}`` so the perf
+trajectory (per-linear → batched-xla → batched-pallas) is diffable across
+PRs. Set REPRO_BENCH_STEPS to raise the training budget (default keeps the
+whole suite a few CPU-minutes)."""
 from __future__ import annotations
 
 import json
@@ -15,6 +20,8 @@ import time
 
 def main(argv=None) -> None:
     argv = list(sys.argv[1:] if argv is None else argv)
+    tiny = "--tiny" in argv
+    argv = [a for a in argv if a != "--tiny"]
     steps = int(os.environ.get("REPRO_BENCH_STEPS", "100"))
 
     from benchmarks import (table1_lm_quality, table2_vlm_overfit,
@@ -24,7 +31,7 @@ def main(argv=None) -> None:
         "table1": lambda: table1_lm_quality.run(steps=steps),
         "table2": lambda: table2_vlm_overfit.run(steps=max(40, steps // 2)),
         "table3": table3_memory.run,
-        "table4": table4_time.run,
+        "table4": lambda: table4_time.run(tiny=tiny),
         "table5": lambda: table5_convergence.run(steps=max(40, steps // 2)),
         "roofline": roofline.run,
     }
@@ -38,8 +45,16 @@ def main(argv=None) -> None:
         dt = time.perf_counter() - t0
         with open(f"artifacts/bench/{name}.json", "w") as f:
             json.dump(rows, f, indent=1)
+        if name == "table4" and not tiny:
+            # --tiny is a smoke run (single config, no MoE row) — don't let
+            # it clobber the full cross-PR trajectory at the repo root
+            flat = [b for r in rows for b in r.get("bench", [])]
+            with open("BENCH_table4.json", "w") as f:
+                json.dump(flat, f, indent=1)
+            print(f"  wrote BENCH_table4.json ({len(flat)} impl rows)")
         for r in rows:
-            print("  " + ",".join(f"{k}={v}" for k, v in r.items()))
+            print("  " + ",".join(f"{k}={v}" for k, v in r.items()
+                                  if k != "bench"))
         print(f"  ({dt:.1f}s)")
         all_rows.extend(rows)
     print(f"\nwrote {len(all_rows)} rows to artifacts/bench/")

@@ -11,3 +11,8 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
 fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# benchmark smoke: the quantization hot path must stay runnable end to end.
+# (--tiny deliberately does NOT rewrite the repo-root BENCH_table4.json —
+# refresh the trajectory with a full `benchmarks.run table4` when perf moves)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table4 --tiny

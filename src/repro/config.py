@@ -177,6 +177,16 @@ class QuantConfig:
     calib_seq_len: int = 512
     act_order: bool = False
     kernel_impl: str = "xla"        # xla | pallas (serving matmul backend)
+    gptq_impl: str = "auto"         # auto | pallas | xla: stage-1 sweep
+    #                                 backend (kernels/ops.py gptq_block —
+    #                                 fused Pallas lazy-block kernel vs the
+    #                                 vmapped fori_loop XLA body; "auto" =
+    #                                 pallas on TPU when the (U + row tile)
+    #                                 VMEM residency fits, else xla)
+    jit_capture: bool = True        # jit the per-layer calibration forward
+    #                                 (capture + propagate), cached per layer
+    #                                 signature within one quantize_model
+    #                                 run; False = legacy eager forwards
     batched_executor: bool = True   # group same-shape linears into vmapped
     #                                 GPTQ+RPIQ plan dispatches (core/plan.py);
     #                                 False = legacy per-linear dispatch

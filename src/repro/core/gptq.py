@@ -17,6 +17,12 @@ embarrassingly parallel in ``Cout`` — every op below is vectorized over rows,
 so sharding rows across the mesh parallelizes GPTQ exactly (no approximation:
 rows are independent given ``U``). The whole function is jit-safe: fixed
 shapes, ``fori_loop`` + ``dynamic_slice`` only.
+
+The public entries (:func:`gptq_quantize`, :func:`gptq_quantize_batched`)
+route through :func:`repro.kernels.ops.gptq_block`, which dispatches the
+sweep either to the fused Pallas kernel (kernels/gptq_block.py — one
+``pallas_call`` per group sweep) or to the vmapped ``_gptq_core`` XLA body
+kept here as the reference/fallback path (``quant.gptq_impl`` config knob).
 """
 from __future__ import annotations
 
@@ -27,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hessian as hess
+from repro.kernels import ops as kops
 
 
 class GPTQResult(NamedTuple):
@@ -138,35 +145,53 @@ def _gptq_core(w: jax.Array, hinv_u: jax.Array, *, bits: int,
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size",
                                              "blocksize", "symmetric"))
-def gptq_quantize(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
-                  group_size: int = 128, blocksize: int = 128,
-                  symmetric: bool = False) -> GPTQResult:
-    """Quantize ``w`` (out, in) given ``hinv_u``, upper Cholesky of H̃^{-1}.
-
-    ``in % blocksize == 0`` and ``blocksize % group_size == 0`` (shipped
-    configs use 128/128; tests exercise smaller aligned sizes).
-    """
-    return _gptq_core(w, hinv_u, bits=bits, group_size=group_size,
-                      blocksize=blocksize, symmetric=symmetric)
-
-
-@functools.partial(jax.jit, static_argnames=("bits", "group_size",
-                                             "blocksize", "symmetric"))
-def gptq_quantize_batched(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
-                          group_size: int = 128, blocksize: int = 128,
-                          symmetric: bool = False) -> GPTQResult:
-    """vmapped GPTQ over a stacked leading axis.
-
-    w: (B, out, in); hinv_u: (B, in, in). One jit cache entry covers the
-    whole group — B same-shape linears quantize in a single dispatch, and
-    every per-column op inside the loop is B× wider, which is the
-    quant-plan executor's throughput win over per-linear dispatch.
-    Fields of the returned GPTQResult carry the stacked leading axis.
-    """
+def _gptq_xla_batched(w: jax.Array, hinv_u: jax.Array, *, bits: int,
+                      group_size: int, blocksize: int,
+                      symmetric: bool) -> GPTQResult:
+    """The XLA fallback behind :func:`repro.kernels.ops.gptq_block`:
+    vmapped ``_gptq_core`` over the stacked member axis (the PR 1 batched
+    executor body — O(Cin) dispatched ops per sweep)."""
     assert w.ndim == 3 and hinv_u.ndim == 3, (w.shape, hinv_u.shape)
     fn = functools.partial(_gptq_core, bits=bits, group_size=group_size,
                            blocksize=blocksize, symmetric=symmetric)
     return jax.vmap(fn)(w, hinv_u)
+
+
+def gptq_quantize(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
+                  group_size: int = 128, blocksize: int = 128,
+                  symmetric: bool = False, impl: str = "auto") -> GPTQResult:
+    """Quantize ``w`` (out, in) given ``hinv_u``, upper Cholesky of H̃^{-1}.
+
+    ``in % blocksize == 0`` and ``blocksize % group_size == 0`` (shipped
+    configs use 128/128; tests exercise smaller aligned sizes).  ``impl``
+    selects the sweep backend through the kernel dispatcher
+    (:func:`repro.kernels.ops.gptq_block`): the fused Pallas kernel
+    ("pallas"), the vmapped XLA body ("xla"), or backend-based "auto".
+    """
+    w_q, scales, zeros, err = kops.gptq_block(
+        w, hinv_u, bits=bits, group_size=group_size, blocksize=blocksize,
+        symmetric=symmetric, impl=impl)
+    return GPTQResult(w_q, scales, zeros, err)
+
+
+def gptq_quantize_batched(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
+                          group_size: int = 128, blocksize: int = 128,
+                          symmetric: bool = False,
+                          impl: str = "auto") -> GPTQResult:
+    """Batched GPTQ over a stacked leading axis.
+
+    w: (B, out, in); hinv_u: (B, in, in). One dispatch covers the whole
+    group — B same-shape linears quantize together, which is the
+    quant-plan executor's throughput win over per-linear dispatch.  On the
+    "pallas" path the stack maps onto the kernel's member grid axis (one
+    ``pallas_call`` for the whole sweep); on "xla" it vmaps the scalar
+    body.  Fields of the returned GPTQResult carry the stacked axis.
+    """
+    assert w.ndim == 3 and hinv_u.ndim == 3, (w.shape, hinv_u.shape)
+    w_q, scales, zeros, err = kops.gptq_block(
+        w, hinv_u, bits=bits, group_size=group_size, blocksize=blocksize,
+        symmetric=symmetric, impl=impl)
+    return GPTQResult(w_q, scales, zeros, err)
 
 
 def gptq_from_hessian(w: jax.Array, H: hess.HessianState, *, bits: int = 4,

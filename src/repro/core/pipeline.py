@@ -4,11 +4,15 @@ Sequential layer-wise calibration, exactly as GPTQ/AutoGPTQ practice it and
 the paper assumes:
 
   1. embed every calibration batch → residual streams ``hs``;
-  2. for each transformer layer (eagerly, segment-element by element):
+  2. for each transformer layer (segment-element by element):
      a. **capture** — run the layer over all batches with a :class:`Tap`
         that streams each named linear's inputs into its Hessian
         (eq. 9, ``H += X_bᵀX_b``) and keeps only the **last** batch's
-        inputs resident (single-instance paradigm, eq. 11);
+        inputs resident (single-instance paradigm, eq. 11). With
+        ``quant.jit_capture`` (default) the forward is COMPILED — the tap
+        collects tracers inside the jit and the inputs come back as
+        outputs — and cached per layer signature, so repeated layers
+        reuse the compiled forward (``False`` = legacy eager capture);
      b. **plan** — :func:`repro.core.plan.build_plan` turns the captured
         linears (dense taps AND stacked MoE expert slices) into a
         :class:`~repro.core.plan.QuantPlan`: members grouped by
@@ -56,6 +60,54 @@ from repro.models import transformer as T
 from repro.models import moe as moe_mod
 from repro.models.linear import Tap
 from repro.models.layers import embed, norm, sinusoidal_positions
+
+
+# ---------------------------------------------------------------------------
+# Jitted calibration forward (capture + propagate)
+#
+# The capture/propagate forwards used to run eagerly, op by op — the
+# second wall-clock dominator after the executors (benchmarks/
+# table4_time.py).  ``_layer_forward_jit`` compiles them instead: the Tap
+# opens INSIDE the traced function in collect-tracers mode, so the tapped
+# layer inputs come back as ordinary jit outputs.  Entries are cached per
+# (fwd_key, batch index, layer-signature) for ONE ``quantize_model`` run
+# — repeated layers (same spec + shapes) reuse the compiled forward, and
+# scoping the cache to the run keeps closure constants (positions,
+# encoder outputs) from leaking across models.  Batch-independent layers
+# collapse the batch index to 0; the encoder-decoder decoder bakes
+# ``enc_out[bi]`` into the trace, so it keys per batch.
+# ---------------------------------------------------------------------------
+
+def _tree_signature(tree) -> Tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (str(treedef),
+            tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+
+
+def _layer_forward_jit(fwd_cache: Dict, fwd_key: Tuple, apply_fn,
+                       params: Dict, h: jax.Array, bi: int,
+                       batch_dependent: bool, collect: bool = True):
+    """Run one layer forward compiled; returns (h_out, {name: [inputs]}).
+
+    ``collect=False`` (the propagate pass) compiles a tap-less forward —
+    returning the tapped inputs as jit outputs would force XLA to
+    materialize every linear's input buffer the caller then discards.
+    """
+    key_bi = bi if batch_dependent else 0
+    key = (fwd_key, key_bi, collect, _tree_signature(params), h.shape,
+           str(h.dtype))
+    fn = fwd_cache.get(key)
+    if fn is None:
+        def fwd(p, hh, _bi=bi):
+            if not collect:
+                return apply_fn(p, hh, _bi), {}
+            tap = Tap(collect_tracers=True)
+            with tap:
+                out = apply_fn(p, hh, _bi)
+            return out, {k: list(v) for k, v in tap.records.items()}
+        fn = jax.jit(fwd)
+        fwd_cache[key] = fn
+    return fn(params, h)
 
 
 def _resolve(tree: Dict, dotted: str):
@@ -156,13 +208,21 @@ def _scatter_moe(p_moe: Dict, results: Dict[str, MemberResult],
 
 
 def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
-                   apply_fn, report: QuantReport) -> Tuple[Dict, List]:
+                   apply_fn, report: QuantReport,
+                   fwd_cache: Optional[Dict] = None,
+                   fwd_key: Tuple = ("layer",),
+                   batch_dependent: bool = False) -> Tuple[Dict, List]:
     """Quantize one layer's linears via the plan, then propagate.
 
-    ``apply_fn(params, h, batch_index) -> h_out`` runs the layer eagerly.
-    Returns (new_layer_params, new_hs).
+    ``apply_fn(params, h, batch_index) -> h_out`` runs the layer.  With
+    ``quant.jit_capture`` (default) and a ``fwd_cache`` dict, the capture
+    and propagate forwards run through :func:`_layer_forward_jit` —
+    compiled once per (fwd_key, layer signature) and reused by every
+    identically shaped layer in the stack; otherwise they run eagerly
+    (legacy path).  Returns (new_layer_params, new_hs).
     """
     qc = cfg.quant
+    use_jit = qc.jit_capture and fwd_cache is not None
     is_moe = "mlp" in layer_params and "w_gate" in layer_params.get("mlp", {})
     # 1. capture: stream Hessians, keep last batch inputs
     hessians: Dict[str, hess.HessianState] = {}
@@ -191,8 +251,16 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
         last_x[name] = x2        # overwritten per batch → last batch stays
 
     for bi, h in enumerate(hs):
-        with Tap(on_record=on_record):
-            apply_fn(layer_params, h, bi)
+        if use_jit:
+            _, recs = _layer_forward_jit(fwd_cache, fwd_key, apply_fn,
+                                         layer_params, h, bi,
+                                         batch_dependent)
+            for name, xs in recs.items():
+                for x in xs:
+                    on_record(name, x)
+        else:
+            with Tap(on_record=on_record):
+                apply_fn(layer_params, h, bi)
 
     # 2. plan: dense taps + stacked MoE expert slices as uniform members
     new_params = jax.tree_util.tree_map(lambda x: x, layer_params)
@@ -222,8 +290,16 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
     if is_moe:
         new_params["mlp"] = _scatter_moe(new_params["mlp"], results, "mlp")
 
-    # 4. propagate quantized activations
-    new_hs = [apply_fn(new_params, h, bi) for bi, h in enumerate(hs)]
+    # 4. propagate quantized activations (same compiled forward; the
+    # quantized params carry extra grid leaves, so they key their own
+    # cross-layer cache entry)
+    if use_jit:
+        new_hs = [_layer_forward_jit(fwd_cache, fwd_key, apply_fn,
+                                     new_params, h, bi, batch_dependent,
+                                     collect=False)[0]
+                  for bi, h in enumerate(hs)]
+    else:
+        new_hs = [apply_fn(new_params, h, bi) for bi, h in enumerate(hs)]
     return new_params, new_hs
 
 
@@ -238,16 +314,19 @@ def quantize_model(cfg: Config, params: Dict,
     t_start = time.perf_counter()
     report = QuantReport()
 
+    fwd_cache: Dict = {}     # per-run compiled-forward cache (jit_capture)
     if cfg.model.is_encoder_decoder:
-        out = _quantize_encdec(cfg, params, calib, report, verbose)
+        out = _quantize_encdec(cfg, params, calib, report, verbose,
+                               fwd_cache)
     else:
-        out = _quantize_decoder_only(cfg, params, calib, report, verbose)
+        out = _quantize_decoder_only(cfg, params, calib, report, verbose,
+                                     fwd_cache)
     report.seconds_total = time.perf_counter() - t_start
     return out, report
 
 
 def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
-                           verbose: bool) -> Dict:
+                           verbose: bool, fwd_cache: Dict) -> Dict:
     mc = cfg.model
     dtype = jnp.dtype(mc.dtype)
     hs = []
@@ -276,7 +355,9 @@ def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
                     out, _ = T.layer_forward(mc, _spec, p, h, positions)
                     return out
 
-                lp_new, hs = quantize_layer(cfg, lp, hs, apply_fn, report)
+                lp_new, hs = quantize_layer(cfg, lp, hs, apply_fn, report,
+                                            fwd_cache=fwd_cache,
+                                            fwd_key=("dec", str(spec)))
                 new_elem[f"sub{s_i}"] = lp_new
                 li += 1
                 if verbose:
@@ -289,7 +370,7 @@ def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
 
 
 def _quantize_encdec(cfg: Config, params: Dict, calib, report,
-                     verbose: bool) -> Dict:
+                     verbose: bool, fwd_cache: Dict) -> Dict:
     mc = cfg.model
     dtype = jnp.dtype(mc.dtype)
     # ----- encoder -----
@@ -319,7 +400,8 @@ def _quantize_encdec(cfg: Config, params: Dict, calib, report,
             from repro.models.layers import mlp as mlp_fn
             return h + mlp_fn(mc, p["mlp"], hn, name="mlp")
 
-        lp_new, hs = quantize_layer(cfg, lp, hs, enc_apply, report)
+        lp_new, hs = quantize_layer(cfg, lp, hs, enc_apply, report,
+                                    fwd_cache=fwd_cache, fwd_key=("enc",))
         enc_elems.append(lp_new)
     enc_out = [norm(mc, params["encoder"]["final_norm"], h) for h in hs]
 
@@ -355,7 +437,10 @@ def _quantize_encdec(cfg: Config, params: Dict, calib, report,
             hn = norm(mc, llp["norm2"], h)
             return h + mlp_fn(mc, llp["mlp"], hn, name="layer.mlp")
 
-        lp_new, dhs = quantize_layer(cfg, lp, dhs, dec_apply, report)
+        # enc_out[bi] is baked into the trace → key per batch index
+        lp_new, dhs = quantize_layer(cfg, lp, dhs, dec_apply, report,
+                                     fwd_cache=fwd_cache, fwd_key=("xdec",),
+                                     batch_dependent=True)
         dec_elems.append(lp_new)
 
     out = dict(params)

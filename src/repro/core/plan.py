@@ -33,8 +33,9 @@ path kept for parity tests and the table4 per-linear-vs-batched benchmark.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -226,12 +227,76 @@ def _lane_hessians(m: PlanMember) -> hess.HessianState:
     return hess.HessianState(H, count)
 
 
-@jax.jit
-def _damped_cholesky(H: jax.Array, percdamp: jax.Array):
-    """Fused H̃ + upper-Cholesky-of-inverse for a stacked group (one
-    dispatch instead of ~10 eager ops per group)."""
-    hd = hess.damped(hess.HessianState(H, None), percdamp)
-    return hd, hess.cholesky_inverse_upper(hd)
+# ---------------------------------------------------------------------------
+# Cross-layer executor jit cache
+#
+# Sequential calibration walks the stack layer by layer, but the executor
+# entry a group needs is fully determined by its signature — GroupKey plus
+# the stage statics and the sweep backend.  Keying the jitted stage closures
+# in a module-level cache means the q/k/v/o group of layer 7 reuses the
+# entry layer 0 compiled (first half of the ROADMAP "cross-layer plan
+# batching" item; the pipelined-capture half remains open).  Each cached
+# entry additionally FUSES its stage into one dispatch: stage 1 runs
+# damp + Cholesky + GPTQ sweep (+ the RTN fallback lane when the group has
+# starved members) inside a single jit, stage 2 wraps the RPIQ refinement
+# with its statics bound.
+# ---------------------------------------------------------------------------
+
+_EXEC_CACHE: Dict[Tuple, Callable] = {}
+_EXEC_CACHE_STATS = {"hits": 0, "misses": 0}
+_EXEC_CACHE_MAX = 64     # FIFO-evict beyond this: entries hold compiled
+#                          executables, and jax.clear_caches() doesn't see
+#                          them — a long-lived process sweeping shapes/
+#                          configs must not accumulate programs unboundedly
+
+
+def executor_cache_stats() -> Dict[str, int]:
+    """Copy of {hits, misses} for the cross-layer executor cache."""
+    return dict(_EXEC_CACHE_STATS)
+
+
+def clear_executor_cache() -> None:
+    _EXEC_CACHE.clear()
+    _EXEC_CACHE_STATS["hits"] = 0
+    _EXEC_CACHE_STATS["misses"] = 0
+
+
+def _cached_executor(key: Tuple, make: Callable[[], Callable]) -> Callable:
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        _EXEC_CACHE_STATS["misses"] += 1
+        while len(_EXEC_CACHE) >= _EXEC_CACHE_MAX:
+            _EXEC_CACHE.pop(next(iter(_EXEC_CACHE)))
+        fn = make()
+        _EXEC_CACHE[key] = fn
+    else:
+        _EXEC_CACHE_STATS["hits"] += 1
+    return fn
+
+
+def _make_stage1(qc: QuantConfig, impl: str, with_rtn: bool) -> Callable:
+    bits, group_size = qc.bits, qc.group_size
+    blocksize, symmetric = qc.blocksize, qc.symmetric
+
+    def fn(w, H, percdamp):
+        hd = hess.damped(hess.HessianState(H, None), percdamp)
+        u = hess.cholesky_inverse_upper(hd)
+        res1 = gptq_quantize_batched(w, u, bits=bits, group_size=group_size,
+                                     blocksize=blocksize,
+                                     symmetric=symmetric, impl=impl)
+        rtn = rtn_quantize_batched(w, bits=bits, group_size=group_size,
+                                   symmetric=symmetric) if with_rtn else None
+        return hd, res1, rtn
+
+    return jax.jit(fn)
+
+
+def _make_stage2(qc: QuantConfig) -> Callable:
+    return jax.jit(functools.partial(
+        rpiq_refine_batched, bits=qc.bits, group_size=qc.group_size,
+        block_size=qc.blocksize, alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
+        early_stop=qc.rpiq_early_stop,
+        exact_gram=not qc.rpiq_use_global_hessian))
 
 
 def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
@@ -241,7 +306,9 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
 
     Members concatenate on the lane axis — a stacked member (e.g. E MoE
     experts) contributes its slab wholesale, so lane count is
-    Σ member.lanes while the host-side work stays O(#members).
+    Σ member.lanes while the host-side work stays O(#members).  Stage
+    entries come from the cross-layer cache above, so identically shaped
+    groups anywhere in the stack share one compiled executor.
     """
     ms = group.members
     t0 = time.perf_counter()
@@ -250,16 +317,12 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
     hs_lanes = [_lane_hessians(m) for m in ms]
     st = hess.HessianState(jnp.concatenate([h.H for h in hs_lanes]),
                            jnp.concatenate([h.count for h in hs_lanes]))
-    hd, u = _damped_cholesky(st.H, jnp.float32(qc.percdamp))
-    res1 = gptq_quantize_batched(w, u, bits=qc.bits,
-                                 group_size=qc.group_size,
-                                 blocksize=qc.blocksize,
-                                 symmetric=qc.symmetric)
     starved = np.concatenate([m.starved_mask() for m in ms])
-    rtn = None
-    if starved.any():
-        rtn = rtn_quantize_batched(w, bits=qc.bits, group_size=qc.group_size,
-                                   symmetric=qc.symmetric)
+    with_rtn = bool(starved.any())
+    stage1 = _cached_executor(
+        ("stage1", group.key, qc.gptq_impl, with_rtn),
+        lambda: _make_stage1(qc, qc.gptq_impl, with_rtn))
+    hd, res1, rtn = stage1(w, st.H, jnp.float32(qc.percdamp))
     jax.block_until_ready(res1.w_q)
     t1 = time.perf_counter()
     report.seconds_stage1 += t1 - t0
@@ -270,13 +333,12 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
         x = jnp.concatenate([_as3d(jnp.asarray(m.x_last, jnp.float32))
                              for m in ms])
         xc = jnp.concatenate([_lane_x_counts(m) for m in ms])
-        res2 = rpiq_refine_batched(
-            res1.w_q, w, x, hd, res1.scales, res1.zeros,
-            h_count=st.count, x_count=xc, bits=qc.bits,
-            group_size=qc.group_size, block_size=qc.blocksize,
-            alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
-            early_stop=qc.rpiq_early_stop,
-            exact_gram=not qc.rpiq_use_global_hessian)
+        stage2 = _cached_executor(
+            ("stage2", group.key, qc.rpiq_alpha, qc.rpiq_iters,
+             qc.rpiq_early_stop, qc.rpiq_use_global_hessian),
+            lambda: _make_stage2(qc))
+        res2 = stage2(res1.w_q, w, x, hd, res1.scales, res1.zeros,
+                      h_count=st.count, x_count=xc)
         jax.block_until_ready(res2.w_q)
         t2 = time.perf_counter()
         report.seconds_stage2 += t2 - t1
@@ -363,7 +425,8 @@ def _execute_member_singleton(qc: QuantConfig, m: PlanMember,
     hd = hess.damped(m.hessian, qc.percdamp)
     u = hess.cholesky_inverse_upper(hd)
     res1 = gptq_quantize(w_oi, u, bits=qc.bits, group_size=qc.group_size,
-                         blocksize=qc.blocksize, symmetric=qc.symmetric)
+                         blocksize=qc.blocksize, symmetric=qc.symmetric,
+                         impl=qc.gptq_impl)
     jax.block_until_ready(res1.w_q)
     t1 = time.perf_counter()
     report.seconds_stage1 += t1 - t0

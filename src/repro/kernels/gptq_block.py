@@ -1,0 +1,208 @@
+"""Pallas TPU kernel: one full GPTQ lazy-block sweep per grid cell.
+
+The quantization hot path (paper §3.1 stage 1 / Frantar et al.) is a
+sequential sweep over ``Cin`` columns in lazy blocks of ``blocksize``.  The
+XLA formulation (``core/gptq._gptq_core``) lowers that sweep to a
+``fori_loop``-of-``dynamic_slice`` chain — O(Cin) small dispatched ops per
+member per sweep, which bounds warm executor wall-clock once the plan
+batching (core/plan.py) has removed the per-linear dispatch overhead.
+
+This kernel runs the ENTIRE sweep inside one ``pallas_call``:
+
+  - grid ``(B, Cout/block_out)`` — the stacked group-member axis times
+    row tiles; rows are independent given ``U`` (see gptq.py), so the
+    tiling is exact, not an approximation;
+  - per cell the working ``(block_out, Cin)`` weight tile lives in the
+    output ref (VMEM-resident for the whole sweep) and the member's
+    ``(Cin, Cin)`` Cholesky factor ``U`` streams in once; the active
+    ``(block_out, blocksize)`` weight block and ``(blocksize, blocksize)``
+    diagonal ``U`` block are carried through an in-kernel ``fori_loop``;
+  - per column: group (scale, zero) refresh via masked max/min (exact —
+    the mask only excludes non-group columns from the reduction), column
+    quantize on the (row, group) grid, and intra-block error propagation
+    ``wb -= err · (U[j, j+1:] / U[j, j])`` — the same broadcasted
+    expression as the XLA body, so interpret-mode output is bitwise-close;
+  - per block: the rank-``blocksize`` tail update
+    ``W[:, c2:] -= Err @ U[c1:c2, c2:]`` as one MXU dot with the same
+    operand shapes as the XLA path.
+
+VMEM contract: one cell holds ``U`` (Cin² f32) plus two (block_out, Cin)
+tiles — ~``4·Cin·(Cin + 2·block_out)`` bytes.  At Cin = 1024/block_out =
+128 that is ~5.2 MB; Cin ≳ 1.7k overflows a 16 MB VMEM budget, which is why
+``ops.gptq_block(impl="auto")`` falls back to the XLA path for wide layers
+instead of failing in Mosaic.
+
+Scales/zeros accumulate in registers (``(block_out, n_groups)`` carries)
+and are written once at sweep end; the per-row Σerr² diagnostic is summed
+to the member scalar by the ops.py wrapper.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_OUT = 128     # row tile (MXU/lane aligned)
+
+
+def _iota1d(n: int) -> jax.Array:
+    """1D int32 iota via 2D broadcasted_iota (TPU: 1D iota is invalid)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)[0]
+
+
+def _gptq_block_kernel(w_ref, u_ref, wq_ref, s_ref, z_ref, err_ref, *,
+                       bits: int, group_size: int, blocksize: int,
+                       n_blocks: int, symmetric: bool):
+    """One (member, row-tile) cell: the full sweep over all lazy blocks."""
+    out_t, in_dim = wq_ref.shape[1], wq_ref.shape[2]
+    gpb = blocksize // group_size
+    n_groups = n_blocks * gpb
+    qmax = 2.0 ** bits - 1.0
+
+    cols_bs = _iota1d(blocksize)                  # (bs,) in-block column ids
+    cols_in = _iota1d(in_dim)                     # (Cin,) absolute columns
+    groups = _iota1d(n_groups)                    # (n_groups,)
+    eye_bs = (jax.lax.broadcasted_iota(jnp.int32, (blocksize, blocksize), 0)
+              == jax.lax.broadcasted_iota(jnp.int32,
+                                          (blocksize, blocksize), 1))
+
+    wq_ref[0] = w_ref[0].astype(jnp.float32)
+
+    def block_step(b, carry):
+        sfull, zfull, err_rows = carry
+        c1 = pl.multiple_of(b * blocksize, blocksize)
+        wb0 = wq_ref[0, :, pl.ds(c1, blocksize)]            # (out_t, bs)
+        u_rows = u_ref[0, pl.ds(c1, blocksize), :]          # (bs, Cin)
+        ub = u_ref[0, pl.ds(c1, blocksize), pl.ds(c1, blocksize)]
+        diag = jnp.sum(jnp.where(eye_bs, ub, 0.0), axis=1)  # (bs,) exact
+
+        def col_step(j, cc):
+            wb, errb, scale, zero, sfull, zfull = cc
+            onehot = cols_bs == j                            # (bs,)
+
+            def refresh(args):
+                wb, scale, zero, sfull, zfull = args
+                # masked (scale, zero) — exact: the mask only drops
+                # non-group columns from the max/min reductions (order-free)
+                gmask = (cols_bs // group_size) == (j // group_size)
+                if symmetric:
+                    absmax = jnp.max(jnp.where(gmask[None, :], jnp.abs(wb),
+                                               0.0), axis=1)
+                    scale = jnp.maximum(absmax / (2.0 ** (bits - 1) - 1),
+                                        1e-8)
+                    zero = jnp.zeros_like(scale)
+                else:
+                    wmax = jnp.maximum(jnp.max(
+                        jnp.where(gmask[None, :], wb, -jnp.inf), axis=1),
+                        0.0)
+                    wmin = jnp.minimum(jnp.min(
+                        jnp.where(gmask[None, :], wb, jnp.inf), axis=1),
+                        0.0)
+                    scale = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+                    zero = jnp.clip(jnp.round(-wmin / scale), 0.0, qmax)
+                gsel = (groups == ((c1 + j) // group_size))[None, :]
+                sfull = jnp.where(gsel, scale[:, None], sfull)
+                zfull = jnp.where(gsel, zero[:, None], zfull)
+                return scale, zero, sfull, zfull
+
+            # group-entry refresh only (the cond skips the reductions on
+            # the other group_size-1 columns, like the XLA body)
+            scale, zero, sfull, zfull = jax.lax.cond(
+                j % group_size == 0, refresh,
+                lambda args: (args[1], args[2], args[3], args[4]),
+                (wb, scale, zero, sfull, zfull))
+
+            # one-hot extraction is exact: a single nonzero per reduction
+            wcol = jnp.sum(jnp.where(onehot[None, :], wb, 0.0), axis=1)
+            d = jnp.sum(jnp.where(onehot, diag, 0.0))
+            if symmetric:
+                lo, hi = -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1
+                q = jnp.clip(jnp.round(wcol / scale), lo, hi) * scale
+            else:
+                q = (jnp.clip(jnp.round(wcol / scale) + zero, 0.0, qmax)
+                     - zero) * scale
+            err = (wcol - q) / d
+            urow = jnp.sum(jnp.where(onehot[:, None], ub, 0.0), axis=0)
+            mask = (cols_bs > j).astype(jnp.float32)
+            wb = wb - err[:, None] * (urow * mask)[None, :]
+            wb = jnp.where(onehot[None, :], q[:, None], wb)
+            errb = jnp.where(onehot[None, :], err[:, None], errb)
+            return wb, errb, scale, zero, sfull, zfull
+
+        init = (wb0, jnp.zeros_like(wb0),
+                jnp.zeros((out_t,), jnp.float32),
+                jnp.zeros((out_t,), jnp.float32), sfull, zfull)
+        wb, errb, _, _, sfull, zfull = jax.lax.fori_loop(
+            0, blocksize, col_step, init)
+
+        # lazy batch update: W[:, c2:] -= Err @ U[c1:c2, c2:] — same operand
+        # shapes as the XLA path so the contraction rounds identically
+        tail = (cols_in >= c1 + blocksize).astype(jnp.float32)
+        w_full = wq_ref[0]
+        w_full = w_full - jnp.dot(errb, u_rows * tail[None, :],
+                                  preferred_element_type=jnp.float32)
+        wq_ref[0] = w_full
+        wq_ref[0, :, pl.ds(c1, blocksize)] = wb
+        return sfull, zfull, err_rows + jnp.sum(errb * errb, axis=1)
+
+    init = (jnp.zeros((out_t, n_groups), jnp.float32),
+            jnp.zeros((out_t, n_groups), jnp.float32),
+            jnp.zeros((out_t,), jnp.float32))
+    sfull, zfull, err_rows = jax.lax.fori_loop(0, n_blocks, block_step, init)
+    s_ref[0] = sfull
+    z_ref[0] = zfull
+    err_ref[0] = err_rows[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size",
+                                             "blocksize", "block_out",
+                                             "symmetric", "interpret"))
+def gptq_block_pallas(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
+                      group_size: int = 128, blocksize: int = 128,
+                      block_out: int = DEFAULT_BLOCK_OUT,
+                      symmetric: bool = False, interpret: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full GPTQ sweep for a stacked group. One ``pallas_call``.
+
+    w: (B, out, in) f32; hinv_u: (B, in, in) upper Cholesky of H̃^{-1}.
+    Returns (w_q (B, out, in), scales (B, out, in//group_size), zeros
+    (same), err_rows (B, out, 1) per-row Σerr² — trailing singleton keeps
+    the output block TPU-tileable).  Divisibility is the caller's
+    contract: ``in % blocksize == 0``, ``blocksize % group_size == 0``,
+    ``out % block_out == 0`` (ops.py pads rows and slices back).
+    """
+    b, out_dim, in_dim = w.shape
+    assert in_dim % blocksize == 0 and blocksize % group_size == 0, \
+        (w.shape, blocksize, group_size)
+    assert out_dim % block_out == 0, (w.shape, block_out)
+    n_blocks = in_dim // blocksize
+    n_groups = in_dim // group_size
+    grid = (b, out_dim // block_out)
+    kernel = functools.partial(_gptq_block_kernel, bits=bits,
+                               group_size=group_size, blocksize=blocksize,
+                               n_blocks=n_blocks, symmetric=symmetric)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_out, in_dim), lambda m, i: (m, i, 0)),
+            pl.BlockSpec((1, in_dim, in_dim), lambda m, i: (m, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_out, in_dim), lambda m, i: (m, i, 0)),
+            pl.BlockSpec((1, block_out, n_groups), lambda m, i: (m, i, 0)),
+            pl.BlockSpec((1, block_out, n_groups), lambda m, i: (m, i, 0)),
+            pl.BlockSpec((1, block_out, 1), lambda m, i: (m, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, out_dim, in_dim), jnp.float32),
+            jax.ShapeDtypeStruct((b, out_dim, n_groups), jnp.float32),
+            jax.ShapeDtypeStruct((b, out_dim, n_groups), jnp.float32),
+            jax.ShapeDtypeStruct((b, out_dim, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w.astype(jnp.float32), hinv_u.astype(jnp.float32))

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.gptq_block import gptq_block_pallas
 from repro.kernels.hessian_accum import hessian_accum_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
@@ -110,6 +111,74 @@ def quant_pack(w: jax.Array, scales: jax.Array, zeros: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# GPTQ lazy-block sweep (stage-1 quantization hot path)
+# ---------------------------------------------------------------------------
+
+_VMEM_BUDGET_BYTES = 12 * 1024 * 1024     # conservative 16 MB minus headroom
+
+
+def _gptq_vmem_bytes(block_out: int, in_dim: int, blocksize: int) -> int:
+    """Per-cell residency: U (in²) + w-in/w-out tiles + the U row slab."""
+    return 4 * (in_dim * in_dim + 2 * block_out * in_dim
+                + blocksize * in_dim)
+
+
+def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
+               group_size: int = 128, blocksize: int = 128,
+               symmetric: bool = False, impl: str = "auto",
+               block_out: int = 0, interpret: bool | None = None):
+    """One full GPTQ lazy-block sweep; the quantize-stage dispatcher.
+
+    w: (out, in) or stacked (B, out, in); hinv_u matches with (in, in)
+    trailing dims.  Returns ``(w_q, scales, zeros, err)`` shaped like the
+    inputs (err: scalar per member).
+
+    ``impl``: "pallas" forces the fused kernel (interpret-mode off-TPU),
+    "xla" the ``fori_loop``-of-``dynamic_slice`` reference body in
+    :mod:`repro.core.gptq`, and "auto" picks pallas on TPU only when the
+    per-cell VMEM residency (U + two row tiles) fits the budget — wide
+    layers (Cin ≳ 1.7k at f32) fall back to XLA instead of failing in
+    Mosaic.  ``interpret`` overrides the off-TPU interpret default (the
+    TPU-export path in benchmarks passes ``interpret=False`` to count the
+    kernel as the single XLA op it is on hardware).
+    """
+    squeeze = w.ndim == 2
+    if squeeze:
+        w, hinv_u = w[None], hinv_u[None]
+    assert w.ndim == 3 and hinv_u.ndim == 3, (w.shape, hinv_u.shape)
+    out_dim, in_dim = w.shape[-2:]
+    assert in_dim % blocksize == 0 and blocksize % group_size == 0, \
+        (w.shape, blocksize, group_size)
+    bo = block_out or (128 if out_dim >= 128 else _round_up(out_dim, 8))
+    # "auto" stays on XLA in multi-device processes: the documented
+    # row-sharded GPTQ path (gptq.py docstring, examples/
+    # distributed_quantize.py) relies on XLA partitioning the pure-XLA
+    # sweep exactly, and the pallas_call carries no sharding rule yet
+    # (ROADMAP "sharded group execution"). Force impl="pallas" to override.
+    use_pallas = impl == "pallas" or (
+        impl == "auto" and _on_tpu() and jax.device_count() == 1
+        and _gptq_vmem_bytes(bo, in_dim, blocksize) <= _VMEM_BUDGET_BYTES)
+    if not use_pallas:
+        from repro.core.gptq import _gptq_xla_batched
+        res = _gptq_xla_batched(w, hinv_u, bits=bits, group_size=group_size,
+                                blocksize=blocksize, symmetric=symmetric)
+        out = (res.w_q, res.scales, res.zeros, res.err)
+    else:
+        out_pad = _round_up(out_dim, bo)
+        if out_pad != out_dim:
+            w = jnp.pad(w, ((0, 0), (0, out_pad - out_dim), (0, 0)))
+        w_q, scales, zeros, err_rows = gptq_block_pallas(
+            w, hinv_u, bits=bits, group_size=group_size,
+            blocksize=blocksize, block_out=bo, symmetric=symmetric,
+            interpret=(not _on_tpu()) if interpret is None else interpret)
+        out = (w_q[:, :out_dim], scales[:, :out_dim], zeros[:, :out_dim],
+               jnp.sum(err_rows[:, :out_dim, 0], axis=-1))
+    if squeeze:
+        out = tuple(o[0] for o in out)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Mamba-1 selective scan
 # ---------------------------------------------------------------------------
 
@@ -148,4 +217,5 @@ def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
     return y.astype(u.dtype), h_last.astype(h0.dtype)
 
 
-__all__ = ["hessian_accum", "w4a16_matmul", "quant_pack", "selective_scan"]
+__all__ = ["hessian_accum", "w4a16_matmul", "quant_pack", "gptq_block",
+           "selective_scan"]

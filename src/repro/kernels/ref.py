@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def hessian_accum_ref(x: jax.Array) -> jax.Array:
@@ -62,6 +63,74 @@ def selective_scan_ref(u: jax.Array, dt: jax.Array, bm: jax.Array,
           cm.astype(jnp.float32).transpose(1, 0, 2))
     h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
     return ys.transpose(1, 0, 2).astype(u.dtype), h_last.astype(h0.dtype)
+
+
+def gptq_block_ref(w, hinv_u, *, bits: int = 4, group_size: int = 128,
+                   blocksize: int = 128, symmetric: bool = False):
+    """Pure-NumPy GPTQ lazy-block sweep — the oracle for gptq_block.
+
+    w: (out, in) or (B, out, in); hinv_u: matching (in, in) / (B, in, in)
+    upper Cholesky of the damped inverse Hessian.  Returns (w_q, scales,
+    zeros, err) with err the scalar Σerr² per member.  Mirrors
+    ``core/gptq._gptq_core`` step for step (AutoGPTQ semantics: group
+    qparams refresh from the error-compensated weights at group entry).
+    """
+    if np.ndim(w) == 3:
+        outs = [gptq_block_ref(np.asarray(w)[i], np.asarray(hinv_u)[i],
+                               bits=bits, group_size=group_size,
+                               blocksize=blocksize, symmetric=symmetric)
+                for i in range(np.shape(w)[0])]
+        return tuple(np.stack([o[k] for o in outs]) for k in range(4))
+
+    w = np.array(w, np.float32)
+    u = np.array(hinv_u, np.float32)
+    out_dim, in_dim = w.shape
+    assert in_dim % blocksize == 0 and blocksize % group_size == 0
+    qmax = 2.0 ** bits - 1.0
+    n_groups = in_dim // group_size
+    scales = np.zeros((out_dim, n_groups), np.float32)
+    zeros = np.zeros((out_dim, n_groups), np.float32)
+    tot_err = np.float32(0.0)
+
+    for c1 in range(0, in_dim, blocksize):
+        c2 = c1 + blocksize
+        wb = w[:, c1:c2].copy()
+        ub = u[c1:c2, c1:c2]
+        errb = np.zeros_like(wb)
+        scale = zero = None
+        for j in range(blocksize):
+            if j % group_size == 0:
+                g = (c1 + j) // group_size
+                wg = wb[:, (j // group_size) * group_size:
+                        (j // group_size + 1) * group_size]
+                if symmetric:
+                    absmax = np.max(np.abs(wg), axis=1)
+                    scale = np.maximum(
+                        absmax / (2.0 ** (bits - 1) - 1), 1e-8)
+                    zero = np.zeros_like(scale)
+                else:
+                    wmax = np.maximum(np.max(wg, axis=1), 0.0)
+                    wmin = np.minimum(np.min(wg, axis=1), 0.0)
+                    scale = np.maximum((wmax - wmin) / qmax, 1e-8)
+                    zero = np.clip(np.round(-wmin / scale), 0.0, qmax)
+                scales[:, g] = scale
+                zeros[:, g] = zero
+            wcol = wb[:, j]
+            d = ub[j, j]
+            if symmetric:
+                lo, hi = -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1
+                q = np.clip(np.round(wcol / scale), lo, hi) * scale
+            else:
+                q = (np.clip(np.round(wcol / scale) + zero, 0.0, qmax)
+                     - zero) * scale
+            err = (wcol - q) / d
+            wb[:, j + 1:] -= err[:, None] * ub[j, j + 1:][None, :]
+            wb[:, j] = q
+            errb[:, j] = err
+        w[:, c2:] -= errb @ u[c1:c2, c2:]
+        w[:, c1:c2] = wb
+        tot_err += np.sum(errb * errb)
+    return w, scales, zeros, np.float32(tot_err)
 
 
 def quant_pack_ref(w: jax.Array, scales: jax.Array, zeros: jax.Array,

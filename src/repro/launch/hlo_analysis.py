@@ -177,6 +177,56 @@ def cost_terms(compiled, hlo_text: str, n_devices: int,
     return out
 
 
+def executed_op_count(hlo_text: str, n_devices: int = 1) -> int:
+    """Trip-count-aware executed-XLA-op count of an optimized HLO module.
+
+    Counts every non-free instruction (fusion internals included, so the
+    number is backend-fusion-invariant) and multiplies ``while`` bodies by
+    their ``known_trip_count`` — i.e. "how many XLA ops run per launch",
+    the dispatch-overhead metric behind the fused-kernel claim
+    (benchmarks/table4_time.py): a ``fori_loop``-of-``dynamic_slice``
+    sweep counts O(trip · body), a Pallas kernel counts as the single
+    custom-call it is.
+    """
+    from repro.launch.hlo_text import HloCostAnalyzer
+    return int(HloCostAnalyzer(hlo_text, n_devices).entry_cost().ops)
+
+
+_STABLEHLO_FREE = ("stablehlo.constant", "stablehlo.return", "func.return",
+                   "stablehlo.tuple", "stablehlo.get_tuple_element")
+
+
+def stablehlo_op_count(mlir_text: str) -> int:
+    """Static op count of an exported StableHLO module (no trip scaling —
+    used for loop-free programs such as the Pallas quantize stage, where
+    the whole sweep is one ``tpu_custom_call``)."""
+    n = 0
+    for mm in re.finditer(r"=\s+\"?((?:stablehlo|chlo|mhlo)\.[\w.]+)",
+                          mlir_text):
+        if mm.group(1) not in _STABLEHLO_FREE:
+            n += 1
+    return n
+
+
+def tpu_exported_op_count(fn, *args) -> Optional[int]:
+    """XLA-op count of ``fn`` lowered FOR TPU via cross-platform export.
+
+    Works on any host (Mosaic kernel lowering needs no TPU runtime); this
+    is how the CPU container measures what a Pallas path dispatches on
+    hardware — compiling it locally would instead count the interpret-mode
+    emulation loop.  Returns None when export is unavailable or fails
+    (e.g. a kernel that cannot lower), so callers can degrade gracefully.
+    """
+    try:
+        from jax import export as jax_export
+        import jax
+        abstract = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+        exp = jax_export.export(jax.jit(fn), platforms=["tpu"])(*abstract)
+        return stablehlo_op_count(exp.mlir_module())
+    except Exception:
+        return None
+
+
 def model_flops_estimate(cfg, shape) -> float:
     """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for train;
     2·N(_active) per generated token for decode; 2·N·D for prefill."""

@@ -64,6 +64,10 @@ class Cost:
     flops: float = 0.0
     bytes: float = 0.0
     ici_bytes: float = 0.0
+    ops: float = 0.0       # trip-count-aware executed-op count (free ops —
+    #                        parameter/constant/tuple plumbing — excluded;
+    #                        fusion internals included so the count is
+    #                        backend-fusion-invariant)
     coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
     coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
 
@@ -71,6 +75,7 @@ class Cost:
         self.flops += other.flops * scale
         self.bytes += other.bytes * scale
         self.ici_bytes += other.ici_bytes * scale
+        self.ops += other.ops * scale
         for k, v in other.coll_counts.items():
             self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * scale
         for k, v in other.coll_bytes.items():
@@ -145,6 +150,7 @@ class HloCostAnalyzer:
             return tot
 
         if op == "dot":
+            c.ops += 1
             mm = _CONTRACT_RE.search(line)
             contracted = 1.0
             if mm and opnames:
@@ -195,6 +201,7 @@ class HloCostAnalyzer:
             if mm:
                 inner = self.cost_of(mm.group(1))
                 c.flops += inner.flops          # fused dots/elementwise
+                c.ops += inner.ops              # fusion-invariant op count
                 c.ici_bytes += inner.ici_bytes
                 for k, v in inner.coll_counts.items():
                     c.coll_counts[k] = c.coll_counts.get(k, 0) + v
@@ -210,10 +217,12 @@ class HloCostAnalyzer:
                     "reduce-window", "sort", "scatter", "select-and-scatter"):
             c.bytes += rbytes + operand_bytes()
             c.flops += relems
+            c.ops += 1
             mm = _CALLS_RE.search(line)
             if mm and mm.group(1) in self.computations:
                 inner = self.cost_of(mm.group(1))
                 c.flops += inner.flops
+                c.ops += inner.ops
                 c.ici_bytes += inner.ici_bytes
         elif any(op.startswith(k) for k in _COLLECTIVES):
             if op.endswith("-done"):
@@ -221,6 +230,7 @@ class HloCostAnalyzer:
             kind = op.replace("-start", "")
             g = self._group_size(line)
             c.bytes += rbytes + operand_bytes()
+            c.ops += 1
             if g > 1:
                 c.coll_counts[kind] = c.coll_counts.get(kind, 0) + 1
                 c.coll_bytes[kind] = c.coll_bytes.get(kind, 0) + rbytes
@@ -241,26 +251,32 @@ class HloCostAnalyzer:
         elif op in ("slice", "dynamic-slice", "gather"):
             # reads only the sliced/gathered region, not the whole operand
             c.bytes += 2.0 * rbytes
+            c.ops += 1
         elif op == "dynamic-update-slice":
             # in-place: read + write the *update* region only
             upd = symtab.get(opnames[1], "") if len(opnames) > 1 else ""
             ub = _shape_bytes_elems(upd)[0] if upd else rbytes
             c.bytes += 2.0 * min(ub, rbytes)
+            c.ops += 1
         elif op == "scatter":
             upd = symtab.get(opnames[-1], "") if opnames else ""
             ub = _shape_bytes_elems(upd)[0] if upd else rbytes
             c.bytes += 3.0 * min(ub, rbytes)
+            c.ops += 1
         elif op in ("copy", "transpose", "concatenate", "pad", "reverse"):
             c.bytes += rbytes + operand_bytes()
+            c.ops += 1
         elif op in _ELEMENTWISE or op in ("broadcast", "convert"):
             # TPU memory model: standalone elementwise/convert/broadcast
             # fuse into their producer/consumer (the CPU backend leaves them
             # unfused in this HLO; charging operand+result here inflated the
             # memory term ~30× — measured). FLOPs still count.
             c.flops += relems
+            c.ops += 1
         else:
             c.bytes += rbytes + operand_bytes()
             c.flops += relems
+            c.ops += 1
         return c
 
     def _root_is_dus(self, comp: str) -> bool:

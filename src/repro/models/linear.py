@@ -10,9 +10,12 @@ behaviours, decided by the *value* stored under ``"w"``:
     name, which is how the quantization pipeline collects Hessians and the
     single-instance batch without any framework hooks.
 
-Taps only fire outside jit (calibration runs layers eagerly, layer by
-layer — see core/pipeline.py); inside jit the records would be tracers, so
-``Tap.record`` refuses them loudly.
+Default taps only fire outside jit — inside jit the records would be
+tracers, so ``Tap.record`` refuses them loudly.  The jitted calibration
+forward (core/pipeline.py) instead opens a ``Tap(collect_tracers=True)``
+*inside* the traced function: records are then collected as tracers and
+returned as part of the jitted function's output, which is how capture
+runs compiled without framework hooks.
 """
 from __future__ import annotations
 
@@ -35,10 +38,11 @@ class Tap:
     """
 
     def __init__(self, on_record: Optional[Callable[[str, jax.Array], None]]
-                 = None, prefix: str = ""):
+                 = None, prefix: str = "", collect_tracers: bool = False):
         self.prefix = prefix
         self.records: Dict[str, List[jax.Array]] = {}
         self._on_record = on_record
+        self._collect_tracers = collect_tracers
 
     def __enter__(self) -> "Tap":
         _ACTIVE_TAPS.append(self)
@@ -49,6 +53,11 @@ class Tap:
 
     def record(self, name: str, x: jax.Array) -> None:
         if not name.startswith(self.prefix):
+            return
+        if self._collect_tracers:
+            # jitted-capture mode: tracers are expected; the caller returns
+            # self.records from the traced function (core/pipeline.py)
+            self.records.setdefault(name, []).append(x)
             return
         if isinstance(x, jax.core.Tracer):
             raise RuntimeError(

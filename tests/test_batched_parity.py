@@ -323,6 +323,52 @@ class TestPlanExecution:
         assert len(out) == p["B"]
 
 
+class TestExecutorCache:
+    """Cross-layer jit-cache sharing: identically keyed groups anywhere in
+    the stack must reuse ONE compiled executor entry per stage."""
+
+    def test_identical_groups_share_entries(self, stack_problem):
+        p = stack_problem
+        from repro.config import QuantConfig
+        qc = QuantConfig(group_size=32, blocksize=64, rpiq_iters=2,
+                         rpiq_alpha=0.25)
+        qplan.clear_executor_cache()
+
+        def run_once(tag):
+            ms = [qplan.PlanMember(f"{tag}{i}", p["W"][i], p["sts"][i],
+                                   p["X"][i], x_count=None)
+                  for i in range(p["B"])]
+            plan = qplan.build_plan(qc, ms)
+            qplan.execute_plan(qc, plan, qplan.QuantReport(), batched=True)
+
+        run_once("layer0.")          # cold: one miss per stage
+        s1 = qplan.executor_cache_stats()
+        assert s1 == {"hits": 0, "misses": 2}
+        run_once("layer1.")          # same group signature → pure hits
+        s2 = qplan.executor_cache_stats()
+        assert s2 == {"hits": 2, "misses": 2}
+
+    def test_new_signature_is_a_miss(self, stack_problem):
+        p = stack_problem
+        from repro.config import QuantConfig
+        qc = QuantConfig(group_size=32, blocksize=64, rpiq_iters=2,
+                         rpiq_alpha=0.25)
+        qplan.clear_executor_cache()
+        m = qplan.PlanMember("a", p["W"][0], p["sts"][0], p["X"][0],
+                             x_count=None)
+        qplan.execute_plan(qc, qplan.build_plan(qc, [m]),
+                           qplan.QuantReport(), batched=True)
+        # different group_size → different signature → fresh entries
+        qc2 = QuantConfig(group_size=64, blocksize=64, rpiq_iters=2,
+                          rpiq_alpha=0.25)
+        m2 = qplan.PlanMember("b", p["W"][0], p["sts"][0], p["X"][0],
+                              x_count=None)
+        qplan.execute_plan(qc2, qplan.build_plan(qc2, [m2]),
+                           qplan.QuantReport(), batched=True)
+        st = qplan.executor_cache_stats()
+        assert st["misses"] == 4 and st["hits"] == 0
+
+
 @pytest.mark.slow
 class TestPipelineParity:
     def test_moe_pipeline_batched_matches_perlinear(self):
