@@ -8,8 +8,10 @@ scripts/check.sh runs it). A FULL table4 run additionally rewrites the
 stable machine-trackable ``BENCH_table4.json`` at the repo root — flat rows of
 ``{config, impl, cold_s, warm_s, executor_s, xla_ops}`` so the perf
 trajectory (per-linear → batched-xla → batched-pallas) is diffable across
-PRs. Set REPRO_BENCH_STEPS to raise the training budget (default keeps the
-whole suite a few CPU-minutes)."""
+PRs; docs/BENCHMARKS.md documents the schema, the regeneration contract,
+and why interpret-mode pallas wall-times must not be read as perf. Set
+REPRO_BENCH_STEPS to raise the training budget (default keeps the whole
+suite a few CPU-minutes)."""
 from __future__ import annotations
 
 import json

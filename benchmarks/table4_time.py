@@ -29,6 +29,8 @@ group —
     interpret-mode emulation loop, which is an artifact of the CPU
     container, not the hardware dispatch story; for the same reason the
     interpret-mode ``pallas`` WALL times here do not represent TPU.)
+
+Row schema and regeneration contract: docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 

@@ -10,7 +10,19 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
             "run on the deterministic fallback shim" >&2
 fi
 
+# docs cross-reference check: every *.md cited from src/ must exist
+# (the DESIGN.md §2 citation dangled for three PRs — never again)
+python scripts/docs_xref.py
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# multi-host-device leg: sharded group execution parity on a forced
+# 4-device host mesh (tests/test_plan_sharded.py skips in the
+# single-device run above — the main process must keep the real device
+# for the dry-run contract)
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q tests/test_plan_sharded.py
 
 # benchmark smoke: the quantization hot path must stay runnable end to end.
 # (--tiny deliberately does NOT rewrite the repo-root BENCH_table4.json —

@@ -191,6 +191,14 @@ class QuantConfig:
     #                                 GPTQ+RPIQ plan dispatches (core/plan.py);
     #                                 False = legacy per-linear dispatch
     #                                 (table4 baseline, parity tests)
+    mesh: str = "off"               # sharded group execution (DESIGN.md
+    #                                 §2.6): "off" = single device (default),
+    #                                 "auto" = all devices on the data axis,
+    #                                 "DxM" (e.g. "2x2") = explicit
+    #                                 (data, model) mesh — group lanes shard
+    #                                 over data, Cout row tiles over model;
+    #                                 non-divisible groups stay unsharded
+    #                                 (launch/mesh.make_quant_mesh)
 
 
 @dataclass

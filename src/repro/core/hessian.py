@@ -144,9 +144,32 @@ def gram_solver(Xb: jax.Array, damp_rel: float = 1e-6):
     return solve
 
 
-# -- distributed reduction ---------------------------------------------------
+# -- distributed reduction / placement ---------------------------------------
 
 def psum_hessian(state: HessianState, axis_name: str) -> HessianState:
     """Reduce partial Hessians across a mesh axis (inside shard_map)."""
     return HessianState(jax.lax.psum(state.H, axis_name),
                         jax.lax.psum(state.count, axis_name))
+
+
+def shard_stacked(state: HessianState, gshard) -> HessianState:
+    """Place a stacked (B, in, in) state on the quant-group mesh.
+
+    ``gshard``: a :class:`repro.distributed.sharding.QuantGroupSharding`
+    (duck-typed — only ``sharding(kind)`` is used, so this module needs
+    no distributed import). Sharded over the lane (member) axis only —
+    each lane's (in, in) block is one damp + Cholesky problem, so it
+    lives wholesale on the devices that execute that lane's rows and
+    stays replicated across the ``model`` axis the row tiles use
+    (DESIGN.md §2.6); a rows-only group replicates the state across the
+    whole mesh. Placement is unconditional for a sharded group: every
+    stage input must be committed to the SAME mesh, or a caller-committed
+    Hessian (e.g. scattered output of a previous sharded layer) would
+    clash with the mesh-committed weights at dispatch. No-op only when
+    the group is unsharded (``gshard`` None).
+    """
+    if gshard is None:
+        return state
+    return HessianState(
+        jax.device_put(state.H, gshard.sharding("hessian")),
+        jax.device_put(state.count, gshard.sharding("lane")))

@@ -211,7 +211,8 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
                    apply_fn, report: QuantReport,
                    fwd_cache: Optional[Dict] = None,
                    fwd_key: Tuple = ("layer",),
-                   batch_dependent: bool = False) -> Tuple[Dict, List]:
+                   batch_dependent: bool = False,
+                   mesh=None) -> Tuple[Dict, List]:
     """Quantize one layer's linears via the plan, then propagate.
 
     ``apply_fn(params, h, batch_index) -> h_out`` runs the layer.  With
@@ -219,7 +220,10 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
     and propagate forwards run through :func:`_layer_forward_jit` —
     compiled once per (fwd_key, layer signature) and reused by every
     identically shaped layer in the stack; otherwise they run eagerly
-    (legacy path).  Returns (new_layer_params, new_hs).
+    (legacy path).  ``mesh`` forwards to
+    :func:`repro.core.plan.execute_plan` for sharded group execution
+    (capture itself stays single-device — only executor work scales with
+    the mesh).  Returns (new_layer_params, new_hs).
     """
     qc = cfg.quant
     use_jit = qc.jit_capture and fwd_cache is not None
@@ -277,7 +281,7 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
     plan = qplan.build_plan(qc, members)
 
     # 3. execute groups (batched GPTQ + RPIQ) and scatter back
-    results = qplan.execute_plan(qc, plan, report)
+    results = qplan.execute_plan(qc, plan, report, mesh=mesh)
     for name in dense_names:
         res = results[name]
         if res.w_q is None:
@@ -303,30 +307,44 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
     return new_params, new_hs
 
 
+_MESH_FROM_CONFIG = object()     # sentinel: resolve the quant.mesh knob
+
+
 def quantize_model(cfg: Config, params: Dict,
                    calib: List[Dict[str, jax.Array]],
-                   verbose: bool = False) -> Tuple[Dict, QuantReport]:
+                   verbose: bool = False,
+                   mesh=_MESH_FROM_CONFIG) -> Tuple[Dict, QuantReport]:
     """Quantize every transformer layer of a decoder-only or enc-dec model.
 
     ``calib``: list of batch dicts ({tokens, embeds?/frames?}); the last one
     is the single instance for stage 2.
+
+    ``mesh``: a ``(data, model)`` Mesh for sharded group execution
+    (DESIGN.md §2.6), or None to force single-device execution; left
+    unset, the ``quant.mesh`` knob is resolved through
+    :func:`repro.launch.mesh.make_quant_mesh` (default "off" = single
+    device).
     """
     t_start = time.perf_counter()
     report = QuantReport()
+    if mesh is _MESH_FROM_CONFIG:
+        from repro.launch.mesh import make_quant_mesh
+        mesh = make_quant_mesh(cfg.quant.mesh)
 
     fwd_cache: Dict = {}     # per-run compiled-forward cache (jit_capture)
     if cfg.model.is_encoder_decoder:
         out = _quantize_encdec(cfg, params, calib, report, verbose,
-                               fwd_cache)
+                               fwd_cache, mesh)
     else:
         out = _quantize_decoder_only(cfg, params, calib, report, verbose,
-                                     fwd_cache)
+                                     fwd_cache, mesh)
     report.seconds_total = time.perf_counter() - t_start
     return out, report
 
 
 def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
-                           verbose: bool, fwd_cache: Dict) -> Dict:
+                           verbose: bool, fwd_cache: Dict,
+                           mesh=None) -> Dict:
     mc = cfg.model
     dtype = jnp.dtype(mc.dtype)
     hs = []
@@ -357,7 +375,8 @@ def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
 
                 lp_new, hs = quantize_layer(cfg, lp, hs, apply_fn, report,
                                             fwd_cache=fwd_cache,
-                                            fwd_key=("dec", str(spec)))
+                                            fwd_key=("dec", str(spec)),
+                                            mesh=mesh)
                 new_elem[f"sub{s_i}"] = lp_new
                 li += 1
                 if verbose:
@@ -370,7 +389,7 @@ def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
 
 
 def _quantize_encdec(cfg: Config, params: Dict, calib, report,
-                     verbose: bool, fwd_cache: Dict) -> Dict:
+                     verbose: bool, fwd_cache: Dict, mesh=None) -> Dict:
     mc = cfg.model
     dtype = jnp.dtype(mc.dtype)
     # ----- encoder -----
@@ -401,7 +420,8 @@ def _quantize_encdec(cfg: Config, params: Dict, calib, report,
             return h + mlp_fn(mc, p["mlp"], hn, name="mlp")
 
         lp_new, hs = quantize_layer(cfg, lp, hs, enc_apply, report,
-                                    fwd_cache=fwd_cache, fwd_key=("enc",))
+                                    fwd_cache=fwd_cache, fwd_key=("enc",),
+                                    mesh=mesh)
         enc_elems.append(lp_new)
     enc_out = [norm(mc, params["encoder"]["final_norm"], h) for h in hs]
 
@@ -440,7 +460,7 @@ def _quantize_encdec(cfg: Config, params: Dict, calib, report,
         # enc_out[bi] is baked into the trace → key per batch index
         lp_new, dhs = quantize_layer(cfg, lp, dhs, dec_apply, report,
                                      fwd_cache=fwd_cache, fwd_key=("xdec",),
-                                     batch_dependent=True)
+                                     batch_dependent=True, mesh=mesh)
         dec_elems.append(lp_new)
 
     out = dict(params)

@@ -29,6 +29,19 @@ full-row RTN for starved experts), exactly the legacy semantics.
 ``execute_plan(..., batched=False)`` runs the same plan through the
 singleton executors (one dispatch per linear) — the pre-plan reference
 path kept for parity tests and the table4 per-linear-vs-batched benchmark.
+
+**Sharded group execution** (``execute_plan(..., mesh=...)``, DESIGN.md
+§2.6): each group's stacked slab is embarrassingly parallel over lanes AND
+over Cout, so with a ``(data, model)`` mesh the executor lays the slab out
+lane-axis over ``data`` and row tiles over ``model``
+(:func:`repro.distributed.sharding.quant_group_sharding`), places the
+stacked Hessian state lane-local (damp + Cholesky run where their rows
+run), and sweeps via ``kernels.ops.gptq_block_sharded`` — one device-local
+(member, Cout-tile) kernel per shard, zero sweep collectives.  Groups that
+fail the divisibility guards keep the single-device batched path, so every
+config stays lowerable; executor cache entries are additionally keyed by
+mesh + resolved sharding.  ``quant.mesh`` plumbs this from configs
+(launch/mesh.py; docs/QUANTIZATION.md walks the knobs).
 """
 from __future__ import annotations
 
@@ -43,9 +56,13 @@ import numpy as np
 
 from repro.config import QuantConfig
 from repro.core import hessian as hess
-from repro.core.gptq import (gptq_quantize, gptq_quantize_batched,
-                             rtn_quantize, rtn_quantize_batched)
+from repro.core.gptq import (GPTQResult, gptq_quantize,
+                             gptq_quantize_batched, rtn_quantize,
+                             rtn_quantize_batched)
 from repro.core.rpiq import rpiq_refine, rpiq_refine_batched
+from repro.distributed.sharding import (QuantGroupSharding,
+                                        quant_group_sharding)
+from repro.kernels import ops as kops
 
 
 # ---------------------------------------------------------------------------
@@ -232,14 +249,18 @@ def _lane_hessians(m: PlanMember) -> hess.HessianState:
 #
 # Sequential calibration walks the stack layer by layer, but the executor
 # entry a group needs is fully determined by its signature — GroupKey plus
-# the stage statics and the sweep backend.  Keying the jitted stage closures
-# in a module-level cache means the q/k/v/o group of layer 7 reuses the
-# entry layer 0 compiled (first half of the ROADMAP "cross-layer plan
-# batching" item; the pipelined-capture half remains open).  Each cached
-# entry additionally FUSES its stage into one dispatch: stage 1 runs
-# damp + Cholesky + GPTQ sweep (+ the RTN fallback lane when the group has
+# the stage statics, the sweep backend, and (when sharded) the mesh + the
+# resolved group sharding.  Keying the jitted stage closures in a
+# module-level cache means the q/k/v/o group of layer 7 reuses the entry
+# layer 0 compiled (first half of the ROADMAP "cross-layer plan batching"
+# item; the pipelined-capture half remains open).  Each cached entry
+# additionally FUSES its stage into one dispatch: stage 1 runs damp +
+# Cholesky + GPTQ sweep (+ the RTN fallback lane when the group has
 # starved members) inside a single jit, stage 2 wraps the RPIQ refinement
-# with its statics bound.
+# with its statics bound.  Sharded stage-1 entries close over the mesh
+# (the sweep goes through gptq_block_sharded's shard_map), so the mesh
+# component of the key is what keeps single-device and sharded entries —
+# or two different meshes — from aliasing.
 # ---------------------------------------------------------------------------
 
 _EXEC_CACHE: Dict[Tuple, Callable] = {}
@@ -274,16 +295,27 @@ def _cached_executor(key: Tuple, make: Callable[[], Callable]) -> Callable:
     return fn
 
 
-def _make_stage1(qc: QuantConfig, impl: str, with_rtn: bool) -> Callable:
+def _make_stage1(qc: QuantConfig, impl: str, with_rtn: bool,
+                 gshard: Optional[QuantGroupSharding] = None) -> Callable:
     bits, group_size = qc.bits, qc.group_size
     blocksize, symmetric = qc.blocksize, qc.symmetric
 
     def fn(w, H, percdamp):
+        # inputs arrive committed to the group sharding (lane-local H,
+        # (lane, row)-tiled w); damp + Cholesky partition along with them,
+        # so each lane factors where its rows live.
         hd = hess.damped(hess.HessianState(H, None), percdamp)
         u = hess.cholesky_inverse_upper(hd)
-        res1 = gptq_quantize_batched(w, u, bits=bits, group_size=group_size,
-                                     blocksize=blocksize,
-                                     symmetric=symmetric, impl=impl)
+        if gshard is None:
+            res1 = gptq_quantize_batched(w, u, bits=bits,
+                                         group_size=group_size,
+                                         blocksize=blocksize,
+                                         symmetric=symmetric, impl=impl)
+        else:
+            res1 = GPTQResult(*kops.gptq_block_sharded(
+                w, u, mesh=gshard.mesh, lane_axis=gshard.lane_axis,
+                row_axis=gshard.row_axis, bits=bits, group_size=group_size,
+                blocksize=blocksize, symmetric=symmetric, impl=impl))
         rtn = rtn_quantize_batched(w, bits=bits, group_size=group_size,
                                    symmetric=symmetric) if with_rtn else None
         return hd, res1, rtn
@@ -300,7 +332,8 @@ def _make_stage2(qc: QuantConfig) -> Callable:
 
 
 def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
-                           report: QuantReport, rpiq_enabled: bool
+                           report: QuantReport, rpiq_enabled: bool,
+                           gshard: Optional[QuantGroupSharding] = None
                            ) -> List[MemberResult]:
     """One stacked dispatch per stage for the whole group.
 
@@ -309,6 +342,13 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
     Σ member.lanes while the host-side work stays O(#members).  Stage
     entries come from the cross-layer cache above, so identically shaped
     groups anywhere in the stack share one compiled executor.
+
+    With ``gshard`` the stacked inputs are committed to the group's mesh
+    placement first (weights (lane, row)-tiled, Hessian state and
+    instances lane-local) and the stage entries are the mesh-keyed sharded
+    variants; the outputs come back sharded and are gathered to the
+    default device before scatter (see the comment below — the propagate
+    forward must stay single-device).
     """
     ms = group.members
     t0 = time.perf_counter()
@@ -319,9 +359,13 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
                            jnp.concatenate([h.count for h in hs_lanes]))
     starved = np.concatenate([m.starved_mask() for m in ms])
     with_rtn = bool(starved.any())
+    shard_key = None if gshard is None else gshard.cache_key()
+    if gshard is not None:
+        w = jax.device_put(w, gshard.sharding("w"))
+        st = hess.shard_stacked(st, gshard)
     stage1 = _cached_executor(
-        ("stage1", group.key, qc.gptq_impl, with_rtn),
-        lambda: _make_stage1(qc, qc.gptq_impl, with_rtn))
+        ("stage1", group.key, qc.gptq_impl, with_rtn, shard_key),
+        lambda: _make_stage1(qc, qc.gptq_impl, with_rtn, gshard))
     hd, res1, rtn = stage1(w, st.H, jnp.float32(qc.percdamp))
     jax.block_until_ready(res1.w_q)
     t1 = time.perf_counter()
@@ -333,9 +377,15 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
         x = jnp.concatenate([_as3d(jnp.asarray(m.x_last, jnp.float32))
                              for m in ms])
         xc = jnp.concatenate([_lane_x_counts(m) for m in ms])
+        if gshard is not None:
+            # stage 2 is lane-parallel (vmapped) and row-parallel inside
+            # each lane; committing the instance batch lane-local lets
+            # GSPMD keep the whole refinement lane-resident.
+            x = jax.device_put(x, gshard.sharding("x"))
+            xc = jax.device_put(xc, gshard.sharding("lane"))
         stage2 = _cached_executor(
             ("stage2", group.key, qc.rpiq_alpha, qc.rpiq_iters,
-             qc.rpiq_early_stop, qc.rpiq_use_global_hessian),
+             qc.rpiq_early_stop, qc.rpiq_use_global_hessian, shard_key),
             lambda: _make_stage2(qc))
         res2 = stage2(res1.w_q, w, x, hd, res1.scales, res1.zeros,
                       h_count=st.count, x_count=xc)
@@ -351,6 +401,17 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
         w_final = jnp.where(sel, rtn.w_q, w_final)
         scales = jnp.where(sel, rtn.scales, scales)
         zeros = jnp.where(sel, rtn.zeros, zeros)
+
+    if gshard is not None:
+        # gather the group's artifacts off the mesh: the scatter feeds the
+        # (single-device) propagate forward, and leaving mesh-committed
+        # leaves in the param tree would silently partition that forward —
+        # perturbing downstream Hessians and breaking parity with the
+        # single-device path. The mesh is an executor-internal resource.
+        # device_put to one device reshards on-fabric (no host round-trip).
+        dev0 = jax.local_devices()[0]
+        w_final, scales, zeros = (jax.device_put(a, dev0)
+                                  for a in (w_final, scales, zeros))
 
     seconds = (time.perf_counter() - t0) / max(1, int((~starved).sum()))
     err1 = np.asarray(res1.err)
@@ -496,18 +557,28 @@ def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport
 
 def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
                  rpiq_enabled: bool = True,
-                 batched: Optional[bool] = None) -> Dict[str, MemberResult]:
+                 batched: Optional[bool] = None,
+                 mesh=None) -> Dict[str, MemberResult]:
     """Run every group + fallback; returns {member name → MemberResult}.
 
     ``batched=None`` reads ``qc.batched_executor``; ``False`` forces the
     legacy per-linear dispatch (parity tests, table4 baseline).
+
+    ``mesh`` (a ``(data, model)`` :class:`jax.sharding.Mesh`) turns on
+    sharded group execution: every batched group whose lane count / Cout
+    pass the divisibility guards runs mesh-wide (DESIGN.md §2.6); the rest
+    — and the whole plan when ``mesh`` is None or ``batched`` is False —
+    keep the single-device paths.
     """
     if batched is None:
         batched = qc.batched_executor
     out: Dict[str, MemberResult] = {}
     for group in plan.groups:
         if batched:
-            results = _execute_group_batched(qc, group, report, rpiq_enabled)
+            gshard = quant_group_sharding(
+                mesh, sum(m.lanes for m in group.members), group.key[0])
+            results = _execute_group_batched(qc, group, report, rpiq_enabled,
+                                             gshard)
         else:
             results = [_execute_member_singleton(qc, m, report, rpiq_enabled)
                        for m in group.members]

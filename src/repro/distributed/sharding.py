@@ -12,6 +12,11 @@ Strategy (DESIGN.md §2):
     per layer; optimizer state stays sharded). Within-pod only: cross-pod
     param all-gathers would cross DCN every layer.
   - **SP** (optional) — sequence dim of the residual stream over ``model``.
+  - **Quant-group sharding** (DESIGN.md §2.6) — the batched quantization
+    executor's stacked ``(L, Cout, Cin)`` slabs: lane (member) axis over
+    ``data``, Cout row tiles over ``model`` (rows are independent given the
+    Cholesky factor — see gptq.py), Hessian state over the lane axis only.
+    :func:`quant_group_sharding` below.
 
 Every rule is guarded by divisibility: a dim that doesn't divide by the
 mesh axis size stays unsharded (e.g. whisper's 51866 vocab, minicpm's 36
@@ -373,6 +378,82 @@ def sds_with_shardings(tree: Any, shardings: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
         tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Quantization-group sharding (DESIGN.md §2.6)
+#
+# The batched executor (core/plan.py) stacks a group's L same-shape linears
+# into (L, Cout, Cin) slabs. Quantization is embarrassingly parallel over
+# both leading axes — lanes are independent linears, and rows are
+# independent given the per-lane Cholesky factor (gptq.py) — so the slab
+# shards lane axis over ``data`` and Cout over ``model`` with zero
+# collectives in the sweep (one lane-local psum for the Σerr² diagnostic).
+# The Hessian state (L, Cin, Cin) shards over the lane axis only: each
+# lane's damp + Cholesky runs on the devices that hold that lane's rows,
+# and the factor is replicated across the ``model`` axis its row tiles use.
+# ---------------------------------------------------------------------------
+
+_QUANT_GROUP_SPECS = {
+    # kind → spec template over (lane, row, ...) tokens. Grids (scales/
+    # zeros) share the "w" layout but are only ever produced inside the
+    # sweep's shard_map, never placed from the host.
+    "w":       ("lane", "row", None),        # (L, Cout, Cin) weight slab
+    "hessian": ("lane", None, None),         # (L, Cin, Cin) Gram/damped H
+    "x":       ("lane", None, None),         # (L, n_last, Cin) instance
+    "lane":    ("lane",),                    # (L,) counts / err / masks
+}
+
+
+@dataclass(frozen=True)
+class QuantGroupSharding:
+    """Resolved mesh placement for one quant group's stacked slabs.
+
+    ``lane_axis``/``row_axis`` are mesh axis names or None when the
+    corresponding dim failed its divisibility guard; at least one is set
+    (``quant_group_sharding`` returns None otherwise, and the executor
+    keeps the group single-device).
+    """
+    mesh: Mesh
+    lane_axis: Optional[str]            # stacked member axis → "data"
+    row_axis: Optional[str]             # Cout row tiles → "model"
+
+    def spec(self, kind: str) -> P:
+        tokens = _QUANT_GROUP_SPECS[kind]
+        return P(*(self.lane_axis if t == "lane"
+                   else self.row_axis if t == "row" else None
+                   for t in tokens))
+
+    def sharding(self, kind: str) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(kind))
+
+    def cache_key(self) -> Tuple:
+        """Stable executor-cache component: mesh identity + chosen axes."""
+        return (self.lane_axis, self.row_axis, self.mesh.axis_names,
+                tuple(self.mesh.devices.shape),
+                tuple(d.id for d in self.mesh.devices.flat))
+
+
+def quant_group_sharding(mesh: Optional[Mesh], lanes: int, out_dim: int
+                         ) -> Optional[QuantGroupSharding]:
+    """Placement for a stacked (lanes, out_dim, ·) quant group, or None.
+
+    Divisibility guards mirror the param rules above, per axis: the lane
+    axis is used only when the ``data`` axis size divides ``lanes``
+    evenly (``lanes % |data| == 0``), the row axis only when ``model``
+    divides ``out_dim``. A group that fails both guards stays unsharded
+    (None), so every config remains lowerable regardless of mesh shape.
+    """
+    if mesh is None:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1)
+    tp = sizes.get("model", 1)
+    lane_ax = "data" if dp > 1 and lanes % dp == 0 else None
+    row_ax = "model" if tp > 1 and out_dim % tp == 0 else None
+    if lane_ax is None and row_ax is None:
+        return None
+    return QuantGroupSharding(mesh, lane_ax, row_ax)
 
 
 def make_rules(mesh: Mesh, parallel: Optional[ParallelConfig] = None

@@ -11,7 +11,11 @@ This kernel runs the ENTIRE sweep inside one ``pallas_call``:
 
   - grid ``(B, Cout/block_out)`` — the stacked group-member axis times
     row tiles; rows are independent given ``U`` (see gptq.py), so the
-    tiling is exact, not an approximation;
+    tiling is exact, not an approximation.  The same (member, Cout-tile)
+    grid is the per-shard unit of the mesh-sharded executor: under
+    ``ops.gptq_block_sharded``'s ``shard_map`` each device runs this
+    kernel on its local ``(B/|data|, Cout/|model|, Cin)`` slab
+    (DESIGN.md §2.6);
   - per cell the working ``(block_out, Cin)`` weight tile lives in the
     output ref (VMEM-resident for the whole sweep) and the member's
     ``(Cin, Cin)`` Cholesky factor ``U`` streams in once; the active

@@ -126,7 +126,8 @@ def _gptq_vmem_bytes(block_out: int, in_dim: int, blocksize: int) -> int:
 def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
                group_size: int = 128, blocksize: int = 128,
                symmetric: bool = False, impl: str = "auto",
-               block_out: int = 0, interpret: bool | None = None):
+               block_out: int = 0, interpret: bool | None = None,
+               local: bool = False):
     """One full GPTQ lazy-block sweep; the quantize-stage dispatcher.
 
     w: (out, in) or stacked (B, out, in); hinv_u matches with (in, in)
@@ -141,6 +142,10 @@ def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
     Mosaic.  ``interpret`` overrides the off-TPU interpret default (the
     TPU-export path in benchmarks passes ``interpret=False`` to count the
     kernel as the single XLA op it is on hardware).
+
+    ``local=True`` marks a per-shard call under :func:`gptq_block_sharded`'s
+    ``shard_map``: the operands are device-local slabs, so "auto" skips the
+    multi-device guard below and may lower the pallas kernel per shard.
     """
     squeeze = w.ndim == 2
     if squeeze:
@@ -150,13 +155,17 @@ def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
     assert in_dim % blocksize == 0 and blocksize % group_size == 0, \
         (w.shape, blocksize, group_size)
     bo = block_out or (128 if out_dim >= 128 else _round_up(out_dim, 8))
-    # "auto" stays on XLA in multi-device processes: the documented
-    # row-sharded GPTQ path (gptq.py docstring, examples/
+    # Outside shard_map, "auto" stays on XLA in multi-device processes: the
+    # documented GSPMD row-sharded path (gptq.py docstring, examples/
     # distributed_quantize.py) relies on XLA partitioning the pure-XLA
-    # sweep exactly, and the pallas_call carries no sharding rule yet
-    # (ROADMAP "sharded group execution"). Force impl="pallas" to override.
+    # sweep exactly, and a bare pallas_call carries no sharding rule.  The
+    # sharded executor instead calls back in through gptq_block_sharded,
+    # whose shard_map hands every device its own (member, Cout-tile) slab —
+    # there ``local=True`` and "auto" may pick pallas per shard
+    # (DESIGN.md §2.6).  Force impl="pallas" to override by hand.
     use_pallas = impl == "pallas" or (
-        impl == "auto" and _on_tpu() and jax.device_count() == 1
+        impl == "auto" and _on_tpu()
+        and (local or jax.device_count() == 1)
         and _gptq_vmem_bytes(bo, in_dim, blocksize) <= _VMEM_BUDGET_BYTES)
     if not use_pallas:
         from repro.core.gptq import _gptq_xla_batched
@@ -176,6 +185,50 @@ def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
     if squeeze:
         out = tuple(o[0] for o in out)
     return out
+
+
+def gptq_block_sharded(w: jax.Array, hinv_u: jax.Array, *, mesh,
+                       lane_axis: str | None, row_axis: str | None,
+                       bits: int = 4, group_size: int = 128,
+                       blocksize: int = 128, symmetric: bool = False,
+                       impl: str = "auto", interpret: bool | None = None):
+    """Mesh-sharded GPTQ sweep: one device-local :func:`gptq_block` per shard.
+
+    w: (B, out, in) stacked group slab; hinv_u: (B, in, in).  The slab is
+    laid out ``P(lane_axis, row_axis, None)`` with the Cholesky factors
+    ``P(lane_axis, None, None)`` — the kernel's (member, Cout-tile) grid is
+    exactly the per-shard unit, so each device sweeps its own
+    ``(B/|lane|, out/|row|, in)`` slab with no communication; the only
+    collective is one psum folding the per-shard Σerr² diagnostics over the
+    row axis.  Exact, not approximate: lanes are independent linears and
+    rows are independent given U (gptq.py).  Divisibility over the mesh
+    axes is the caller's contract (``distributed.sharding.
+    quant_group_sharding`` guards it); either axis may be None to shard
+    one dim only.  Under ``local=True`` dispatch, "auto" may lower the
+    fused pallas kernel per shard on TPU.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if lane_axis is None and row_axis is None:
+        return gptq_block(w, hinv_u, bits=bits, group_size=group_size,
+                          blocksize=blocksize, symmetric=symmetric,
+                          impl=impl, interpret=interpret)
+
+    def local_sweep(wl, ul):
+        w_q, scales, zeros, err = gptq_block(
+            wl, ul, bits=bits, group_size=group_size, blocksize=blocksize,
+            symmetric=symmetric, impl=impl, interpret=interpret, local=True)
+        if row_axis is not None:
+            err = jax.lax.psum(err, row_axis)
+        return w_q, scales, zeros, err
+
+    slab = P(lane_axis, row_axis, None)
+    return shard_map(
+        local_sweep, mesh=mesh,
+        in_specs=(slab, P(lane_axis, None, None)),
+        out_specs=(slab, slab, slab, P(lane_axis)),
+        check_rep=False)(w, hinv_u)
 
 
 # ---------------------------------------------------------------------------
@@ -218,4 +271,4 @@ def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
 
 
 __all__ = ["hessian_accum", "w4a16_matmul", "quant_pack", "gptq_block",
-           "selective_scan"]
+           "gptq_block_sharded", "selective_scan"]

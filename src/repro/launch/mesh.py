@@ -1,14 +1,22 @@
 """Production mesh construction.
 
-A function (not a module-level constant) so importing never touches jax
+Functions (not module-level constants) so importing never touches jax
 device state. Single pod: 16×16 = 256 chips (v5e pod), axes (data, model).
 Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the ``pod`` axis
 crosses DCN; sharding rules keep per-layer traffic off it (DP gradient
 reduction and optional GPipe stages are the only pod-axis collectives).
+
+``make_quant_mesh`` resolves the ``quant.mesh`` knob into the
+``(data, model)`` mesh the sharded quantization executor runs on
+(DESIGN.md §2.6, docs/QUANTIZATION.md); the default "off" keeps every
+config on the single-device path.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+from jax.sharding import Mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,3 +30,45 @@ def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
     if pod > 1:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_quant_mesh(spec: str = "off") -> Optional[Mesh]:
+    """``quant.mesh`` knob → (data, model) Mesh for sharded group execution.
+
+    - "off" (default) / "" / "none" / "1x1" → None: single-device batched
+      execution, exactly the pre-mesh behavior;
+    - "auto" → all local devices on the ``data`` axis (lane parallelism
+      needs no Cout divisibility, so it degrades most gracefully);
+    - "DxM" (e.g. "2x2", "8x1") → explicit axis sizes over the first D·M
+      local devices.
+
+    Degrades to None (with a warning) when the spec is malformed or asks
+    for more devices than the process has — a quantize config carrying a
+    mesh knob stays runnable on a laptop, mirroring the per-group
+    divisibility fallback.
+    """
+    def _fallback(why: str):
+        print(f"[mesh] quant.mesh={spec!r} {why} — falling back to "
+              f"single-device execution")
+        return None
+
+    if not spec or spec in ("off", "none", "1", "1x1"):
+        return None
+    if spec == "auto":
+        n = jax.device_count()
+        if n <= 1:
+            return None
+        return make_host_mesh(data=n, model=1)
+    data, _, model = spec.lower().partition("x")
+    try:
+        d, m = int(data), int(model or 1)
+    except ValueError:
+        return _fallback("is not 'off', 'auto' or 'DxM'")
+    if d < 1 or m < 1:
+        return _fallback("has non-positive axis sizes")
+    if d * m <= 1:
+        return None
+    if len(jax.devices()) < d * m:
+        return _fallback(f"needs {d * m} devices, have "
+                         f"{len(jax.devices())}")
+    return make_host_mesh(data=d, model=m)

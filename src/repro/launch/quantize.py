@@ -7,6 +7,11 @@ Loads a checkpoint when train.ckpt_dir has one (quantizing a *trained*
 model); otherwise quantizes a fresh init (still exercises the full path).
 Prints the per-layer Γ convergence summary (paper Table 5) and writes the
 packed int4 params + report.
+
+``quant.mesh`` (e.g. ``quant.mesh=auto`` or ``quant.mesh=8x2``) turns on
+sharded group execution: every quant-plan group that divides the mesh runs
+lane-sharded over ``data`` and row-tiled over ``model`` (DESIGN.md §2.6,
+docs/QUANTIZATION.md). Default "off" = single device.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ from repro.configs.registry import get_config
 from repro.core.pipeline import pack_for_serving, quantize_model
 from repro.data import MarkovLM, calibration_batches
 from repro.distributed.checkpoint import Checkpointer
+from repro.launch.mesh import make_quant_mesh
 from repro.models import transformer as T
 
 
@@ -58,7 +64,12 @@ def main(argv=None):
                 (qc.calib_batch_size, mc.encoder_seq_len, mc.d_model),
                 jnp.float32)
 
-    params_q, report = quantize_model(cfg, params, calib, verbose=True)
+    mesh = make_quant_mesh(qc.mesh)
+    if mesh is not None:
+        print(f"[quantize] sharded group execution on mesh "
+              f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    params_q, report = quantize_model(cfg, params, calib, verbose=True,
+                                      mesh=mesh)
     print(f"[quantize] {report.summary()}")
     packed = pack_for_serving(cfg, params_q)
 

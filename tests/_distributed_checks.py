@@ -188,12 +188,61 @@ def check_quantize_rows_sharded():
     print("OK row-sharded GPTQ exact")
 
 
+def check_sharded_plan_parity():
+    """Sharded group execution == single-device batched quantize_model.
+
+    End-to-end over the knob route: ``quant.mesh="2x2"`` builds the
+    (data, model) mesh through launch/mesh.make_quant_mesh and every
+    divisible plan group runs lane-sharded over ``data`` with Cout row
+    tiles over ``model`` (DESIGN.md §2.6); single-lane groups (e.g. the
+    down-projection) exercise the per-axis divisibility fallback inside
+    the same run. Group-level and non-divisible-group parity is pinned in
+    tests/test_plan_sharded.py (the scripts/check.sh multi-device leg).
+    """
+    from repro.configs import get_config
+    from repro.core.pipeline import quantize_model
+    from repro.data import MarkovLM, calibration_batches
+    from repro.models import transformer as T
+
+    # make_quant_mesh degrades gracefully to single-device on too few
+    # devices — which would make this parity check pass vacuously, so the
+    # forced host device count is a hard precondition here
+    assert jax.device_count() >= 4, \
+        f"forced host devices missing (XLA_FLAGS?): {jax.device_count()}"
+    cfg = get_config("opt-proxy", smoke=True)
+    params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+    calib = calibration_batches(MarkovLM(cfg.model.vocab_size, seed=0),
+                                2, 2, 32)
+    pq1, rep1 = quantize_model(cfg, params, calib)
+    cfg.quant.mesh = "2x2"
+    pq2, rep2 = quantize_model(cfg, params, calib)
+
+    mism, total, worst = 0, 0, 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(pq1),
+                    jax.tree_util.tree_leaves(pq2)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(jax.device_get(b), np.float32)
+        bad = ~np.isclose(a, b, rtol=1e-5, atol=1e-6)
+        mism += int(bad.sum())
+        total += a.size
+        if bad.any():
+            worst = max(worst, float(np.max(np.abs(a - b))))
+    # functional equivalence: tiny fp divergence may flip the odd grid
+    # cell; on the CPU host mesh the paths are in practice bitwise equal
+    assert mism / total <= 1e-3, (mism, total, worst)
+    for l1, l2 in zip(rep1.linears, rep2.linears):
+        assert (l1.name, l1.mode) == (l2.name, l2.mode), (l1, l2)
+    print(f"OK sharded plan == single-device batched "
+          f"(mismatch {mism}/{total})")
+
+
 CHECKS = {
     "sharded_train": check_sharded_train_matches_single,
     "elastic_restore": check_elastic_restore,
     "grad_compression": check_grad_compression,
     "gpipe": check_gpipe_equivalence,
     "gptq_rows": check_quantize_rows_sharded,
+    "plan_sharded": check_sharded_plan_parity,
 }
 
 if __name__ == "__main__":

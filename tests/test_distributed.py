@@ -44,3 +44,12 @@ def test_gpipe_matches_stacked_forward():
 @pytest.mark.slow
 def test_row_sharded_gptq_exact():
     _run("gptq_rows")
+
+
+@pytest.mark.slow
+def test_sharded_plan_matches_batched():
+    """Sharded group execution (quant.mesh knob) == single-device batched.
+
+    Group-level/non-divisible parity lives in tests/test_plan_sharded.py,
+    which runs under the scripts/check.sh forced-device-count leg."""
+    _run("plan_sharded")
