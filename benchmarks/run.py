@@ -3,15 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run [table1 table2 ...] [--tiny]
 
 Writes artifacts/bench/<table>.json and prints a flat CSV-ish summary.
-``--tiny`` shrinks table4 to a CI smoke (single config, fewer repeats —
-scripts/check.sh runs it). A FULL table4 run additionally rewrites the
-stable machine-trackable ``BENCH_table4.json`` at the repo root — flat rows of
-``{config, impl, cold_s, warm_s, executor_s, xla_ops}`` so the perf
-trajectory (per-linear → batched-xla → batched-pallas) is diffable across
-PRs; docs/BENCHMARKS.md documents the schema, the regeneration contract,
-and why interpret-mode pallas wall-times must not be read as perf. Set
-REPRO_BENCH_STEPS to raise the training budget (default keeps the whole
-suite a few CPU-minutes)."""
+``--tiny`` shrinks table4 to a CI smoke (single config, fewer repeats) and
+table5 to one cell per curvature mode (the stage-2 convergence-path smoke)
+— scripts/check.sh runs both. A FULL table4 run additionally rewrites the
+stable machine-trackable ``BENCH_table4.json`` at the repo root — flat rows
+of ``{config, impl, cold_s, warm_s, executor_s, stage1_s, stage2_s,
+xla_ops, xla_ops_s2}`` so the perf trajectory (per-linear → batched-xla →
+batched-pallas, per stage) is diffable across PRs; docs/BENCHMARKS.md
+documents the schema, the regeneration contract, and why interpret-mode
+pallas wall-times must not be read as perf. Set REPRO_BENCH_STEPS to raise
+the training budget (default keeps the whole suite a few CPU-minutes)."""
 from __future__ import annotations
 
 import json
@@ -34,7 +35,8 @@ def main(argv=None) -> None:
         "table2": lambda: table2_vlm_overfit.run(steps=max(40, steps // 2)),
         "table3": table3_memory.run,
         "table4": lambda: table4_time.run(tiny=tiny),
-        "table5": lambda: table5_convergence.run(steps=max(40, steps // 2)),
+        "table5": lambda: table5_convergence.run(steps=max(40, steps // 2),
+                                                 tiny=tiny),
         "roofline": roofline.run,
     }
     wanted = argv or list(suites)

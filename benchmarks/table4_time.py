@@ -13,18 +13,22 @@ stacks 8 experts (gate/up share one 16-member group). Cold = first run
 paper's deployment claim). Parity of the two paths is pinned bitwise-close
 in tests/test_batched_parity.py.
 
-The ``gptq_impl`` rows compare the stage-1 sweep backends behind
-``kernels/ops.gptq_block`` on the batched executor, and MEASURE the
-dispatch-overhead claim instead of asserting it: ``xla_ops`` is the
-executed-XLA-op count of the quantize-stage dispatch for the row's largest
-group —
+The impl rows compare the per-stage backends behind ``kernels/ops`` on the
+batched executor — stage 1 (``gptq_block``) AND stage 2 (``rpiq_block``)
+set to the same backend per row — and MEASURE the dispatch-overhead claim
+instead of asserting it: ``xla_ops`` / ``xla_ops_s2`` are the executed-
+XLA-op counts of the stage-1 / stage-2 dispatches for the row's largest
+group, and ``executor_s`` splits into ``stage1_s``/``stage2_s`` so the
+closed-loop cost is visible on its own —
 
-  - ``xla``: the vmapped ``fori_loop`` body compiled locally, counted
+  - ``xla``: the vmapped loop bodies compiled locally, counted
     trip-count-aware (``launch/hlo_analysis.executed_op_count``) — O(Cin)
-    ops per sweep;
-  - ``pallas``: the fused kernel lowered FOR TPU via cross-platform export
-    (``tpu_exported_op_count``) — the whole sweep is one
-    ``tpu_custom_call``, so the count is the handful of pad/slice ops
+    ops per stage-1 sweep, O(t·n_blocks) per stage-2 refinement (the
+    stage-2 ``while`` has no known trip count, so its body is counted
+    once — a LOWER bound on the xla side, conservative for the claim);
+  - ``pallas``: the fused kernels lowered FOR TPU via cross-platform
+    export (``tpu_exported_op_count``) — each whole stage is one
+    ``tpu_custom_call``, so the count is the handful of pad/reduce ops
     around it.  (Compiling the pallas path on CPU would count the
     interpret-mode emulation loop, which is an artifact of the CPU
     container, not the hardware dispatch story; for the same reason the
@@ -57,51 +61,93 @@ def _largest_group_shape(cfg) -> tuple:
     return (4, mc.d_model, mc.d_model)
 
 
-def _quant_stage_op_counts(cfg) -> dict:
-    """Executed-XLA-op count of the stage-1 sweep dispatch per impl."""
+def _quant_stage_op_counts(cfg, n_last: int = 128) -> dict:
+    """Executed-XLA-op counts of the stage-1 AND stage-2 dispatches per
+    impl, for the row's largest group: {impl: {"s1": ops, "s2": ops}}.
+
+    ``n_last`` mirrors the calibration instance rows the timed runs below
+    feed stage 2 (batch 4 × seq 32)."""
     qc = cfg.quant
     b, out_d, in_d = _largest_group_shape(cfg)
+    bs = qc.blocksize
     w = jnp.zeros((b, out_d, in_d), jnp.float32)
     u = jnp.broadcast_to(jnp.eye(in_d, dtype=jnp.float32), (b, in_d, in_d))
-    kw = dict(bits=qc.bits, group_size=qc.group_size,
-              blocksize=qc.blocksize, symmetric=qc.symmetric)
-    xla_txt = jax.jit(
-        lambda w, u: kops.gptq_block(w, u, impl="xla", **kw)
+    x = jnp.zeros((b, n_last, in_d), jnp.float32)
+    s = jnp.ones((b, out_d, in_d // qc.group_size), jnp.float32)
+    z = jnp.zeros_like(s)
+    # (M, bs, bs) explicit block inverses: like the stage-1 count (which
+    # takes the Cholesky factor U as an input), the curvature pre-factor is
+    # excluded — it is the SAME code on both backends, so counting it would
+    # only dilute the backend comparison the row exists to measure
+    hinv = jnp.broadcast_to(jnp.eye(bs, dtype=jnp.float32),
+                            (b, in_d // bs, bs, bs))
+    kw1 = dict(bits=qc.bits, group_size=qc.group_size, blocksize=bs,
+               symmetric=qc.symmetric)
+    kw2 = dict(bits=qc.bits, group_size=qc.group_size, block_size=bs,
+               alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
+               early_stop=qc.rpiq_early_stop, symmetric=qc.symmetric)
+
+    def stage2(impl, **over):
+        return lambda w, wf, x, hv, s, z: kops.rpiq_block(
+            w, wf, x, hv, s, z, impl=impl, **kw2, **over)
+
+    xla1 = jax.jit(
+        lambda w, u: kops.gptq_block(w, u, impl="xla", **kw1)
     ).lower(w, u).compile().as_text()
+    xla2 = jax.jit(stage2("xla")).lower(w, w, x, hinv, s,
+                                        z).compile().as_text()
     return {
-        "xla": ha.executed_op_count(xla_txt),
-        "pallas": ha.tpu_exported_op_count(
-            lambda w, u: kops.gptq_block(w, u, impl="pallas",
-                                         interpret=False, **kw), w, u),
+        "xla": {"s1": ha.executed_op_count(xla1),
+                "s2": ha.executed_op_count(xla2)},
+        "pallas": {
+            "s1": ha.tpu_exported_op_count(
+                lambda w, u: kops.gptq_block(w, u, impl="pallas",
+                                             interpret=False, **kw1), w, u),
+            "s2": ha.tpu_exported_op_count(
+                stage2("pallas", interpret=False), w, w, x, hinv, s, z),
+        },
     }
 
 
-def _time_gptq_impls(cfg, params, calib, label: str, repeats: int = 3,
-                     op_counts: bool = True) -> list:
-    """Flat BENCH rows: batched executor with each stage-1 sweep backend."""
+def _timed_repeats(cfg, params, calib, repeats: int):
+    """Best-of-``repeats`` post-compile runs: (min wall seconds,
+    (executor_s, stage1_s, stage2_s) of the best-executor run)."""
+    walls, stats = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _, rep = quantize_model(cfg, params, calib)
+        walls.append(time.perf_counter() - t0)
+        stats.append((rep.seconds_stage1 + rep.seconds_stage2,
+                      rep.seconds_stage1, rep.seconds_stage2))
+    return min(walls), min(stats)
+
+
+def _time_impls(cfg, params, calib, label: str, repeats: int = 3,
+                op_counts: bool = True) -> list:
+    """Flat BENCH rows: batched executor with BOTH per-stage backends set
+    to the row's impl (stage-1 gptq_block + stage-2 rpiq_block)."""
     ops_by_impl = _quant_stage_op_counts(cfg) if op_counts else {}
     rows = []
     cfg.quant.batched_executor = True
     for impl in ("xla", "pallas"):
         cfg.quant.gptq_impl = impl
+        cfg.quant.rpiq_impl = impl
         jax.clear_caches()
         qplan.clear_executor_cache()
         t0 = time.perf_counter()
         quantize_model(cfg, params, calib)
         cold = time.perf_counter() - t0
-        walls, execs = [], []
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            _, rep = quantize_model(cfg, params, calib)
-            walls.append(time.perf_counter() - t0)
-            execs.append(rep.seconds_stage1 + rep.seconds_stage2)
+        wall, best = _timed_repeats(cfg, params, calib, repeats)
+        ops = ops_by_impl.get(impl, {}) or {}
         rows.append({
             "config": label, "impl": impl,
-            "cold_s": round(cold, 2), "warm_s": round(min(walls), 2),
-            "executor_s": round(min(execs), 3),
-            "xla_ops": ops_by_impl.get(impl),
+            "cold_s": round(cold, 2), "warm_s": round(wall, 2),
+            "executor_s": round(best[0], 3),
+            "stage1_s": round(best[1], 3), "stage2_s": round(best[2], 3),
+            "xla_ops": ops.get("s1"), "xla_ops_s2": ops.get("s2"),
         })
     cfg.quant.gptq_impl = "auto"
+    cfg.quant.rpiq_impl = "auto"
     return rows
 
 
@@ -124,14 +170,11 @@ def _time_exec_paths(cfg, params, calib, repeats: int = 5) -> dict:
         t0 = time.perf_counter()
         quantize_model(cfg, params, calib)
         out[f"t_{label}_cold_s"] = round(time.perf_counter() - t0, 2)
-        walls, execs = [], []
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            _, rep = quantize_model(cfg, params, calib)
-            walls.append(time.perf_counter() - t0)
-            execs.append(rep.seconds_stage1 + rep.seconds_stage2)
-        out[f"t_{label}_s"] = round(min(walls), 2)
-        out[f"t_{label}_exec_s"] = round(min(execs), 3)
+        wall, best = _timed_repeats(cfg, params, calib, repeats)
+        out[f"t_{label}_s"] = round(wall, 2)
+        out[f"t_{label}_exec_s"] = round(best[0], 3)
+        out[f"t_{label}_s1_s"] = round(best[1], 3)
+        out[f"t_{label}_s2_s"] = round(best[2], 3)
     out["speedup_warm"] = round(
         out["t_perlinear_s"] / max(out["t_batched_s"], 1e-9), 2)
     out["speedup_exec"] = round(
@@ -182,8 +225,11 @@ def run(tiny: bool = False) -> list:
             {"config": label, "impl": "perlinear",
              "cold_s": row["t_perlinear_cold_s"],
              "warm_s": row["t_perlinear_s"],
-             "executor_s": row["t_perlinear_exec_s"], "xla_ops": None},
-        ] + _time_gptq_impls(cfg, params, calib, label, repeats=repeats)
+             "executor_s": row["t_perlinear_exec_s"],
+             "stage1_s": row["t_perlinear_s1_s"],
+             "stage2_s": row["t_perlinear_s2_s"],
+             "xla_ops": None, "xla_ops_s2": None},
+        ] + _time_impls(cfg, params, calib, label, repeats=repeats)
         rows.append(row)
 
     if tiny:
@@ -203,12 +249,18 @@ def run(tiny: bool = False) -> list:
     row["bench"] = [
         {"config": label, "impl": "perlinear",
          "cold_s": row["t_perlinear_cold_s"], "warm_s": row["t_perlinear_s"],
-         "executor_s": row["t_perlinear_exec_s"], "xla_ops": None},
-    ] + _time_gptq_impls(cfg, params, calib, label)
-    # the headline fused-kernel claim, measured (≥10× required):
+         "executor_s": row["t_perlinear_exec_s"],
+         "stage1_s": row["t_perlinear_s1_s"],
+         "stage2_s": row["t_perlinear_s2_s"],
+         "xla_ops": None, "xla_ops_s2": None},
+    ] + _time_impls(cfg, params, calib, label)
+    # the headline fused-kernel claims, measured (≥10× required per stage):
     impls = {b["impl"]: b for b in row["bench"]}
     if impls.get("pallas", {}).get("xla_ops"):
         row["op_reduction"] = round(
             impls["xla"]["xla_ops"] / impls["pallas"]["xla_ops"], 1)
+    if impls.get("pallas", {}).get("xla_ops_s2"):
+        row["op_reduction_s2"] = round(
+            impls["xla"]["xla_ops_s2"] / impls["pallas"]["xla_ops_s2"], 1)
     rows.append(row)
     return rows

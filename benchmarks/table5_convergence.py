@@ -13,14 +13,21 @@ from benchmarks.common import bench_config, make_calib, train_lm
 from repro.core.pipeline import quantize_model
 
 
-def run(steps: int = 60) -> list:
+def run(steps: int = 60, tiny: bool = False) -> list:
+    """``tiny`` (scripts/check.sh smoke leg) shrinks to a barely trained
+    model and one cell per curvature mode — it exercises the stage-2
+    convergence path end to end, not the α sweep."""
+    if tiny:
+        steps = min(steps, 15)
     cfg0 = bench_config("opt-proxy")
     params, lm, _ = train_lm(cfg0, steps=steps, mix_sentiment=False)
     calib = make_calib(cfg0, lm)
 
+    cells = ((("global-h", 0.01), ("exact-gram", 1.0)) if tiny else
+             (("global-h", 0.01), ("global-h", 0.1),
+              ("exact-gram", 0.25), ("exact-gram", 1.0)))
     rows = []
-    for mode, alpha in (("global-h", 0.01), ("global-h", 0.1),
-                        ("exact-gram", 0.25), ("exact-gram", 1.0)):
+    for mode, alpha in cells:
         cfg = bench_config("opt-proxy")
         cfg.quant.rpiq_use_global_hessian = mode == "global-h"
         cfg.quant.rpiq_alpha = alpha

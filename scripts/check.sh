@@ -24,7 +24,16 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q tests/test_plan_sharded.py
 
-# benchmark smoke: the quantization hot path must stay runnable end to end.
+# kernel leg: the fused-kernel parity pins under the registered `pallas`
+# marker (stage-1 gptq_block + stage-2 rpiq_block interpret-mode suites)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q -m pallas tests/test_rpiq_kernel.py \
+  tests/test_gptq_kernel.py
+
+# benchmark smoke: the quantization hot path must stay runnable end to end —
+# table4 covers the executor/dispatch story, table5 the stage-2 convergence
+# path (Γ trajectories + early stop) on both curvature modes.
 # (--tiny deliberately does NOT rewrite the repo-root BENCH_table4.json —
 # refresh the trajectory with a full `benchmarks.run table4` when perf moves)
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table4 --tiny
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table5 --tiny

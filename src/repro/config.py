@@ -183,6 +183,15 @@ class QuantConfig:
     #                                 vmapped fori_loop XLA body; "auto" =
     #                                 pallas on TPU when the (U + row tile)
     #                                 VMEM residency fits, else xla)
+    rpiq_impl: str = "auto"         # auto | pallas | xla: stage-2 closed-
+    #                                 loop backend (kernels/ops.py
+    #                                 rpiq_block — fused Gauss–Seidel
+    #                                 Pallas kernel, all rounds in one
+    #                                 pallas_call, vs the vmapped
+    #                                 while_loop XLA body; "auto" = pallas
+    #                                 on TPU when the row tile + instance
+    #                                 slab + block inverses fit VMEM, else
+    #                                 xla)
     jit_capture: bool = True        # jit the per-layer calibration forward
     #                                 (capture + propagate), cached per layer
     #                                 signature within one quantize_model

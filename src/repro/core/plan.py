@@ -59,7 +59,7 @@ from repro.core import hessian as hess
 from repro.core.gptq import (GPTQResult, gptq_quantize,
                              gptq_quantize_batched, rtn_quantize,
                              rtn_quantize_batched)
-from repro.core.rpiq import rpiq_refine, rpiq_refine_batched
+from repro.core.rpiq import RPIQResult, rpiq_refine, rpiq_refine_batched
 from repro.distributed.sharding import (QuantGroupSharding,
                                         quant_group_sharding)
 from repro.kernels import ops as kops
@@ -323,12 +323,28 @@ def _make_stage1(qc: QuantConfig, impl: str, with_rtn: bool,
     return jax.jit(fn)
 
 
-def _make_stage2(qc: QuantConfig) -> Callable:
-    return jax.jit(functools.partial(
-        rpiq_refine_batched, bits=qc.bits, group_size=qc.group_size,
-        block_size=qc.blocksize, alpha=qc.rpiq_alpha, t_max=qc.rpiq_iters,
-        early_stop=qc.rpiq_early_stop,
-        exact_gram=not qc.rpiq_use_global_hessian))
+def _make_stage2(qc: QuantConfig, impl: str,
+                 gshard: Optional[QuantGroupSharding] = None) -> Callable:
+    kw = dict(bits=qc.bits, group_size=qc.group_size,
+              block_size=qc.blocksize, alpha=qc.rpiq_alpha,
+              t_max=qc.rpiq_iters, early_stop=qc.rpiq_early_stop,
+              symmetric=qc.symmetric,
+              exact_gram=not qc.rpiq_use_global_hessian)
+    if gshard is None:
+        return jax.jit(functools.partial(rpiq_refine_batched, impl=impl,
+                                         **kw))
+
+    def fn(w_init, w_fp, x, hd, scales, zeros, h_count=None, x_count=None):
+        # the stage-2 shard_map twin: lanes shard like stage 1; rows shard
+        # only when the per-shard dispatch resolves to the fused kernel
+        # (the closed-loop bookkeeping is global over rows — see
+        # kernels/ops.rpiq_block_sharded)
+        return RPIQResult(*kops.rpiq_block_sharded(
+            w_init, w_fp, x, hd, scales, zeros, h_count=h_count,
+            x_count=x_count, mesh=gshard.mesh, lane_axis=gshard.lane_axis,
+            row_axis=gshard.row_axis, impl=impl, **kw))
+
+    return jax.jit(fn)
 
 
 def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
@@ -378,15 +394,16 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
                              for m in ms])
         xc = jnp.concatenate([_lane_x_counts(m) for m in ms])
         if gshard is not None:
-            # stage 2 is lane-parallel (vmapped) and row-parallel inside
-            # each lane; committing the instance batch lane-local lets
-            # GSPMD keep the whole refinement lane-resident.
+            # commit the instance batch lane-local so the stage-2 shard_map
+            # twin (rpiq_block_sharded) keeps each lane's refinement where
+            # its rows run without a gather at dispatch
             x = jax.device_put(x, gshard.sharding("x"))
             xc = jax.device_put(xc, gshard.sharding("lane"))
         stage2 = _cached_executor(
             ("stage2", group.key, qc.rpiq_alpha, qc.rpiq_iters,
-             qc.rpiq_early_stop, qc.rpiq_use_global_hessian, shard_key),
-            lambda: _make_stage2(qc))
+             qc.rpiq_early_stop, qc.rpiq_use_global_hessian, qc.rpiq_impl,
+             shard_key),
+            lambda: _make_stage2(qc, qc.rpiq_impl, gshard))
         res2 = stage2(res1.w_q, w, x, hd, res1.scales, res1.zeros,
                       h_count=st.count, x_count=xc)
         jax.block_until_ready(res2.w_q)
@@ -502,7 +519,8 @@ def _execute_member_singleton(qc: QuantConfig, m: PlanMember,
                        bits=qc.bits, group_size=qc.group_size,
                        block_size=qc.blocksize, alpha=qc.rpiq_alpha,
                        t_max=qc.rpiq_iters, early_stop=qc.rpiq_early_stop,
-                       exact_gram=not qc.rpiq_use_global_hessian)
+                       exact_gram=not qc.rpiq_use_global_hessian,
+                       symmetric=qc.symmetric, impl=qc.rpiq_impl)
     jax.block_until_ready(res2.w_q)
     t2 = time.perf_counter()
     report.seconds_stage2 += t2 - t1

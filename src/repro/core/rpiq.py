@@ -19,6 +19,17 @@ Paper §3.1–3.3 (eq. 2–8, 12–14, 19–23), per linear layer ``Y = X W^T``:
   - loss ``Γ^(t) = ‖Y_orig − Y_q^(t)‖²`` (eq. 23), early stop when it stops
     decreasing or ``T_max`` reached; best projected weights retained.
 
+The public entries (:func:`rpiq_refine`, :func:`rpiq_refine_batched`) route
+through :func:`repro.kernels.ops.rpiq_block`, which dispatches the closed
+loop either to the fused Pallas kernel (kernels/rpiq_block.py — ALL
+Gauss–Seidel rounds in one ``pallas_call``) or to the vmapped
+:func:`_rpiq_core` XLA body kept here as the reference/fallback path
+(``quant.rpiq_impl`` config knob).  Both backends consume the SAME
+pre-factored blockwise curvature: :func:`_block_curvature_inv` turns either
+curvature mode into an explicit ``(M, bs, bs)`` stack of ``H_i^{-1}`` via
+the existing Cholesky, so the inner loop is pure matmuls everywhere — no
+triangular solve inside the sweep (and none in Mosaic).
+
 Notes recorded for EXPERIMENTS.md:
   * eq. 8 keeps a **continuous** iterate (a convex combination of grid points
     is generally off-grid). The deployable artifact must live on the int4
@@ -27,7 +38,11 @@ Notes recorded for EXPERIMENTS.md:
     α = 0.01 the projection usually stays at the stage-1 solution for the
     first iterations; larger α (≤1) trades stability for faster residual
     decay — swept in benchmarks/table5_convergence.py.
-  * everything is row-parallel over ``Cout`` (see gptq.py) and jit-safe.
+  * everything is row-parallel over ``Cout`` (see gptq.py) EXCEPT the
+    closed-loop bookkeeping: Γ, the early stop and the best-projection
+    choice are sums/decisions over ALL rows, which is why the row-sharded
+    execution path folds per-shard loss partials before deciding
+    (kernels/ops.rpiq_block_sharded, DESIGN.md §2.6).
 """
 from __future__ import annotations
 
@@ -37,7 +52,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QuantParams
+from repro.kernels import ops as kops
+# eq. 7 grid projection — ONE definition shared by the XLA body and the
+# fused kernel (rpiq_block.py is a cycle-free leaf; a drifted copy would
+# silently break backend parity).  kernels/ref.py keeps an independent
+# NumPy variant on purpose: the oracle must not share code with the
+# implementations it checks.
+from repro.kernels.rpiq_block import _project
 
 
 class RPIQResult(NamedTuple):
@@ -49,34 +70,13 @@ class RPIQResult(NamedTuple):
     iters_run: jax.Array    # scalar int32: rounds actually executed
 
 
-def _project_block(b: jax.Array, scales: jax.Array, zeros: jax.Array,
-                   bits: int, group_size: int) -> jax.Array:
-    """Q(·): project a (out, bs) block onto the fixed stage-1 grid.
+def _block_curvature_inv(x_last: jax.Array, h_damped: jax.Array,
+                         h_count: jax.Array | None,
+                         x_count: jax.Array | None, *,
+                         block_size: int, exact_gram: bool) -> jax.Array:
+    """Pre-factor the blockwise curvature: explicit ``(M, bs, bs)`` inverses.
 
-    scales/zeros: (out, bs // group_size) for this block's groups.
-    """
-    out_dim, bs = b.shape
-    qmax = 2.0 ** bits - 1.0
-    s = jnp.repeat(scales, group_size, axis=1)
-    z = jnp.repeat(zeros, group_size, axis=1)
-    q = jnp.clip(jnp.round(b / s) + z, 0.0, qmax)
-    return (q - z) * s
-
-
-def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
-               h_damped: jax.Array, scales: jax.Array, zeros: jax.Array,
-               h_count: jax.Array | None, x_count: jax.Array | None, *,
-               bits: int, group_size: int, block_size: int, alpha: float,
-               t_max: int, early_stop: bool,
-               exact_gram: bool) -> RPIQResult:
-    """Single-linear RPIQ body — traceable, vmappable (see batched entry).
-
-    w_init:   (out, in) stage-1 dequantized weights (on-grid)
-    w_fp:     (out, in) full-precision weights (defines Y_orig)
-    x_last:   (n, in)   last calibration batch inputs (single instance)
-    h_damped: (in, in)  stage-1 damped global Hessian H̃
-    scales/zeros: (out, in//group_size) stage-1 grid
-    h_count:  total samples accumulated into H̃. The paper's eq. 13
+    h_count: total samples accumulated into H̃. The paper's eq. 13
         (``H_i^{-1} ≈ (X_i^T X_i)^{-1}``) holds only under consistent
         per-sample normalization; H̃ sums over *all* calibration batches
         while ``X_i^T D_i`` is single-instance, so we rescale
@@ -92,33 +92,25 @@ def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
         spectral radius and Γ diverges (measured). ``True`` implements eq. 6
         literally: per-block Gram ``X_i^T X_i`` of the instance (lightly
         damped), which makes each pre-projection update a true least-squares
-        descent step — stable at α = 1. Both modes keep the best projected
-        candidate, so the returned weights never regress either way.
+        descent step — stable at α = 1.
 
-    ``block_size % group_size == 0`` required (grid aligned to blocks).
+    Both modes Cholesky-factor OUTSIDE the refinement loop and return the
+    explicit inverse (``cho_solve`` against I), so the loop body — XLA and
+    Pallas alike — solves eq. 13–14 as one matmul per block.
     """
-    out_dim, in_dim = w_init.shape
-    assert in_dim % block_size == 0
-    assert block_size % group_size == 0
+    x = x_last.astype(jnp.float32)
+    in_dim = x.shape[-1]
+    assert in_dim % block_size == 0, (x.shape, block_size)
     n_blocks = in_dim // block_size
-    gpb = block_size // group_size
-
-    x = x_last.astype(jnp.float32)              # (n, in)
-    w0 = w_init.astype(jnp.float32)
-    y_orig = x @ w_fp.astype(jnp.float32).T     # (n, out)
-
-    # per-block column slabs of X: (M, n, bs)
-    x_blocks = x.reshape(x.shape[0], n_blocks, block_size).transpose(1, 0, 2)
-
-    # --- pre-factor the blockwise curvature -------------------------------
     if exact_gram:
         # eq. 6 literal: G_i = X_i^T X_i (+ relative damping for rank safety)
-        grams = jnp.einsum("mnb,mnc->mbc", x_blocks, x_blocks)
-        diag_mean = jnp.mean(jnp.diagonal(grams, axis1=1, axis2=2),
+        x_blocks = x.reshape(x.shape[0], n_blocks,
+                             block_size).transpose(1, 0, 2)
+        blocks = jnp.einsum("mnb,mnc->mbc", x_blocks, x_blocks)
+        diag_mean = jnp.mean(jnp.diagonal(blocks, axis1=1, axis2=2),
                              axis=1)             # (M,)
         eye = jnp.eye(block_size, dtype=jnp.float32)
-        grams = grams + (1e-4 * diag_mean + 1e-8)[:, None, None] * eye
-        chol = jax.vmap(jnp.linalg.cholesky)(grams)
+        blocks = blocks + (1e-4 * diag_mean + 1e-8)[:, None, None] * eye
     else:
         # eq. 12–14: block diagonals of the (rescaled) global damped Hessian
         if h_count is None:
@@ -130,29 +122,54 @@ def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
         idx = jnp.arange(n_blocks)
         h4 = (h_damped * h_scale).reshape(n_blocks, block_size,
                                           n_blocks, block_size)
-        h_blocks = h4[idx, :, idx, :]           # (M, bs, bs) block diagonals
-        chol = jax.vmap(jnp.linalg.cholesky)(h_blocks)
-    # per-block grid: (M, out, gpb)
-    s_blocks = scales.reshape(out_dim, n_blocks, gpb).transpose(1, 0, 2)
-    z_blocks = zeros.reshape(out_dim, n_blocks, gpb).transpose(1, 0, 2)
+        blocks = h4[idx, :, idx, :]             # (M, bs, bs) block diagonals
+    chol = jax.vmap(jnp.linalg.cholesky)(blocks)
+    eye = jnp.eye(block_size, dtype=jnp.float32)
+    return jax.vmap(lambda L: jax.scipy.linalg.cho_solve((L, True), eye))(
+        chol)
 
-    def block_outputs(w):
-        """Y_{q,i} = X_i B_i^T for all blocks: (M, n, out)."""
-        wb = w.reshape(out_dim, n_blocks, block_size).transpose(1, 0, 2)
-        return jnp.einsum("mnb,mob->mno", x_blocks, wb)
+
+def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
+               hinv_blocks: jax.Array, scales: jax.Array, zeros: jax.Array,
+               *, bits: int, group_size: int, block_size: int, alpha: float,
+               t_max: int, early_stop: bool, symmetric: bool) -> RPIQResult:
+    """Single-linear RPIQ body — traceable, vmappable (the XLA backend).
+
+    w_init:      (out, in) stage-1 dequantized weights (on-grid)
+    w_fp:        (out, in) full-precision weights (defines Y_orig)
+    x_last:      (n, in)   last calibration batch inputs (single instance)
+    hinv_blocks: (M, bs, bs) pre-factored blockwise curvature inverses
+                 (:func:`_block_curvature_inv`)
+    scales/zeros: (out, in//group_size) stage-1 grid
+
+    ``block_size % group_size == 0`` required (grid aligned to blocks).
+    """
+    out_dim, in_dim = w_init.shape
+    assert in_dim % block_size == 0
+    assert block_size % group_size == 0
+    n_blocks = in_dim // block_size
+
+    x = x_last.astype(jnp.float32)              # (n, in)
+    w0 = w_init.astype(jnp.float32)
+    y_orig = x @ w_fp.astype(jnp.float32).T     # (n, out)
+    hinv = hinv_blocks.astype(jnp.float32)
+
+    # per-block column slabs of X: (M, n, bs)
+    x_blocks = x.reshape(x.shape[0], n_blocks, block_size).transpose(1, 0, 2)
+
+    # grid expanded to column resolution ONCE (hoisted out of the sweep)
+    s_rep = jnp.repeat(scales.astype(jnp.float32), group_size, axis=1)
+    z_rep = jnp.repeat(zeros.astype(jnp.float32), group_size, axis=1)
+    s_blocks = s_rep.reshape(out_dim, n_blocks,
+                             block_size).transpose(1, 0, 2)
+    z_blocks = z_rep.reshape(out_dim, n_blocks,
+                             block_size).transpose(1, 0, 2)
 
     def loss_of(w):
         y = x @ w.T
         return jnp.sum((y_orig - y) ** 2)
 
     gamma0 = loss_of(w0)
-
-    def _project_full(w):
-        s = jnp.repeat(scales, group_size, axis=1)
-        z = jnp.repeat(zeros, group_size, axis=1)
-        qmax = 2.0 ** bits - 1.0
-        q = jnp.clip(jnp.round(w / s) + z, 0.0, qmax)
-        return (q - z) * s
 
     def sweep_block(i, bc):
         w, y_q = bc
@@ -162,10 +179,13 @@ def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
         y_qi = x_i @ b_old.T                            # (n, out)
         d_i = y_orig - (y_q - y_qi)                     # eq. 4/20
         rhs = x_i.T @ d_i                               # (bs, out)
-        b_star = jax.scipy.linalg.cho_solve(
-            (chol[i], True), rhs).T                     # (out, bs) eq. 14
-        b_proj = _project_block(b_star, s_blocks[i], z_blocks[i],
-                                bits, group_size)       # eq. 7
+        # eq. 13–14 with the pre-factored explicit inverse:
+        # B* = (H_i^{-1} rhs)^T as one contraction, (out, bs)
+        b_star = jax.lax.dot_general(rhs, hinv[i],
+                                     (((0,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        b_proj = _project(b_star, s_blocks[i], z_blocks[i],
+                          bits=bits, symmetric=symmetric)   # eq. 7
         b_new = b_old + alpha * (b_proj - b_old)        # eq. 8
         y_q = y_q - y_qi + x_i @ b_new.T                # eq. 21–22
         w = jax.lax.dynamic_update_slice(w, b_new, (0, c1))
@@ -187,7 +207,7 @@ def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
         gamma = jnp.sum((y_orig - y_q) ** 2)            # eq. 23
         hist = hist.at[t + 1].set(gamma)
         # candidate: full projection of the continuous iterate
-        w_proj = _project_full(w)
+        w_proj = _project(w, s_rep, z_rep, bits=bits, symmetric=symmetric)
         ploss = loss_of(w_proj)
         improve = ploss < best_loss
         best_w = jnp.where(improve, w_proj, best_w)
@@ -207,24 +227,50 @@ def _rpiq_core(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "bits", "group_size", "block_size", "t_max", "early_stop", "exact_gram"))
+    "bits", "group_size", "block_size", "alpha", "t_max", "early_stop",
+    "symmetric"))
+def _rpiq_xla_batched(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
+                      hinv_blocks: jax.Array, scales: jax.Array,
+                      zeros: jax.Array, *, bits: int, group_size: int,
+                      block_size: int, alpha: float, t_max: int,
+                      early_stop: bool, symmetric: bool) -> RPIQResult:
+    """The XLA fallback behind :func:`repro.kernels.ops.rpiq_block`:
+    vmapped :func:`_rpiq_core` over the stacked member axis — the
+    ``while_loop``-of-``fori_loop`` body whose O(t·M) dispatched ops per
+    group the fused kernel removes.  Every member runs its own early-stop
+    lane (``iters_run`` stays per-member)."""
+    assert w_init.ndim == 3, w_init.shape
+    fn = functools.partial(_rpiq_core, bits=bits, group_size=group_size,
+                           block_size=block_size, alpha=alpha, t_max=t_max,
+                           early_stop=early_stop, symmetric=symmetric)
+    return jax.vmap(fn)(w_init, w_fp, x_last, hinv_blocks, scales, zeros)
+
+
 def rpiq_refine(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
                 h_damped: jax.Array, scales: jax.Array, zeros: jax.Array, *,
                 h_count: jax.Array | None = None,
                 x_count: jax.Array | None = None,
                 bits: int = 4, group_size: int = 128, block_size: int = 128,
                 alpha: float = 0.01, t_max: int = 5,
-                early_stop: bool = True,
-                exact_gram: bool = False) -> RPIQResult:
-    """Stage-2 refinement for one linear layer (see :func:`_rpiq_core`)."""
-    return _rpiq_core(w_init, w_fp, x_last, h_damped, scales, zeros,
-                      h_count, x_count, bits=bits, group_size=group_size,
-                      block_size=block_size, alpha=alpha, t_max=t_max,
-                      early_stop=early_stop, exact_gram=exact_gram)
+                early_stop: bool = True, exact_gram: bool = False,
+                symmetric: bool = False, impl: str = "auto") -> RPIQResult:
+    """Stage-2 refinement for one linear layer (see :func:`_rpiq_core`).
+
+    ``impl`` selects the closed-loop backend through the kernel dispatcher
+    (:func:`repro.kernels.ops.rpiq_block`): the fused Pallas kernel
+    ("pallas"), the vmapped XLA body ("xla"), or backend-based "auto".
+    """
+    hinv = _block_curvature_inv(x_last, h_damped, h_count, x_count,
+                                block_size=block_size,
+                                exact_gram=exact_gram)
+    out = kops.rpiq_block(w_init, w_fp, x_last, hinv, scales, zeros,
+                          bits=bits, group_size=group_size,
+                          block_size=block_size, alpha=alpha, t_max=t_max,
+                          early_stop=early_stop, symmetric=symmetric,
+                          impl=impl)
+    return RPIQResult(*out)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "bits", "group_size", "block_size", "t_max", "early_stop", "exact_gram"))
 def rpiq_refine_batched(w_init: jax.Array, w_fp: jax.Array,
                         x_last: jax.Array, h_damped: jax.Array,
                         scales: jax.Array, zeros: jax.Array, *,
@@ -233,7 +279,10 @@ def rpiq_refine_batched(w_init: jax.Array, w_fp: jax.Array,
                         bits: int = 4, group_size: int = 128,
                         block_size: int = 128, alpha: float = 0.01,
                         t_max: int = 5, early_stop: bool = True,
-                        exact_gram: bool = False) -> RPIQResult:
+                        exact_gram: bool = False, symmetric: bool = False,
+                        impl: str = "auto", local: bool = False,
+                        interpret: bool | None = None,
+                        loss_psum_axis: str | None = None) -> RPIQResult:
     """vmapped stage-2 over a stacked leading axis (one group dispatch).
 
     Array args gain a leading (B,) axis: w_init/w_fp (B, out, in), x_last
@@ -241,13 +290,22 @@ def rpiq_refine_batched(w_init: jax.Array, w_fp: jax.Array,
     h_count/x_count are (B,) or None. Every member runs its own early-stop
     lane (``iters_run`` stays per-member); the RPIQResult fields carry the
     stacked axis. One jit cache entry per group instead of per linear.
+
+    ``local``/``interpret``/``loss_psum_axis`` plumb through to
+    :func:`repro.kernels.ops.rpiq_block` for the sharded twin — see
+    :func:`repro.kernels.ops.rpiq_block_sharded`.
     """
     assert w_init.ndim == 3, w_init.shape
-    fn = functools.partial(_rpiq_core, bits=bits, group_size=group_size,
-                           block_size=block_size, alpha=alpha, t_max=t_max,
-                           early_stop=early_stop, exact_gram=exact_gram)
-    in_axes = (0, 0, 0, 0, 0, 0,
-               None if h_count is None else 0,
+    prep = functools.partial(_block_curvature_inv, block_size=block_size,
+                             exact_gram=exact_gram)
+    in_axes = (0, 0, None if h_count is None else 0,
                None if x_count is None else 0)
-    return jax.vmap(fn, in_axes=in_axes)(w_init, w_fp, x_last, h_damped,
-                                         scales, zeros, h_count, x_count)
+    hinv = jax.vmap(prep, in_axes=in_axes)(x_last, h_damped, h_count,
+                                           x_count)
+    out = kops.rpiq_block(w_init, w_fp, x_last, hinv, scales, zeros,
+                          bits=bits, group_size=group_size,
+                          block_size=block_size, alpha=alpha, t_max=t_max,
+                          early_stop=early_stop, symmetric=symmetric,
+                          impl=impl, local=local, interpret=interpret,
+                          loss_psum_axis=loss_psum_axis)
+    return RPIQResult(*out)

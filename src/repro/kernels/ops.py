@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.gptq_block import gptq_block_pallas
+from repro.kernels.rpiq_block import rpiq_block_pallas
 from repro.kernels.hessian_accum import hessian_accum_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
@@ -232,6 +233,268 @@ def gptq_block_sharded(w: jax.Array, hinv_u: jax.Array, *, mesh,
 
 
 # ---------------------------------------------------------------------------
+# RPIQ closed-loop refinement (stage-2 hot path)
+# ---------------------------------------------------------------------------
+
+
+def _rpiq_vmem_bytes(block_out: int, in_dim: int, n: int,
+                     block_size: int) -> int:
+    """Per-cell residency: five (block_out, in) tiles (W₀, working W, round
+    candidate, expanded scales/zeros) + the (n, in) instance slab + two
+    (n, block_out) output slabs + the (in, bs) inverse stack."""
+    return 4 * (5 * block_out * in_dim + n * in_dim
+                + 2 * n * block_out + block_size * in_dim)
+
+
+_RPIQ_HBM_BUDGET_BYTES = 2 * 1024 ** 3   # per-dispatch candidate-stack cap
+
+
+def _rpiq_hbm_bytes(b: int, out_pad: int, in_dim: int, t_max: int) -> int:
+    """HBM footprint of the deferred-bookkeeping candidate stack: the
+    kernel materializes all t_max+1 per-round projections (B, t_max+1,
+    out, in) — an O(t_max) inflation the XLA body does not have, so
+    "auto" must budget it separately from VMEM."""
+    return 4 * b * (t_max + 1) * out_pad * in_dim
+
+
+def _rpiq_select(hist_raw: jax.Array, pls_raw: jax.Array,
+                 wp_all: jax.Array, t_max: int, early_stop: bool):
+    """Deferred closed-loop bookkeeping over the raw round trajectory.
+
+    Replays :func:`repro.core.rpiq._rpiq_core`'s while-loop semantics from
+    the (B, t_max+1) raw Γ / projected-loss sums: round 1 always runs,
+    round r+1 runs iff round r did not trip the stop predicate
+    ``Γ^(r) >= Γ^(r-1)·(1-1e-6)``; non-executed rounds mask to +inf in the
+    history; the returned candidate is the FIRST executed round achieving
+    the minimum projected loss (strict-improvement semantics — index 0 is
+    the stage-1 solution itself, so "no round improved" selects it).
+    """
+    b = hist_raw.shape[0]
+    if early_stop:
+        stop = hist_raw[:, 1:] >= hist_raw[:, :-1] * (1.0 - 1e-6)  # (B, T)
+    else:
+        stop = jnp.zeros((b, t_max), bool)
+    live = jnp.cumprod(jnp.logical_not(stop).astype(jnp.int32), axis=1)
+    exec_mask = jnp.concatenate(
+        [jnp.ones((b, 1), jnp.int32), live[:, :-1]], axis=1).astype(bool)
+    iters = jnp.sum(exec_mask, axis=1).astype(jnp.int32)
+    keep = jnp.concatenate([jnp.ones((b, 1), bool), exec_mask], axis=1)
+    hist = jnp.where(keep, hist_raw, jnp.inf)
+    cand = jnp.where(keep, pls_raw, jnp.inf)
+    best = jnp.argmin(cand, axis=1)              # first occurrence of min
+    proj_loss = jnp.take_along_axis(cand, best[:, None], axis=1)[:, 0]
+    w_q = jnp.take_along_axis(wp_all, best[:, None, None, None],
+                              axis=1)[:, 0]
+    return w_q, hist, proj_loss, iters
+
+
+def rpiq_block(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
+               hinv_blocks: jax.Array, scales: jax.Array, zeros: jax.Array,
+               *, bits: int = 4, group_size: int = 128,
+               block_size: int = 128, alpha: float = 0.01, t_max: int = 5,
+               early_stop: bool = True, symmetric: bool = False,
+               impl: str = "auto", block_out: int = 0,
+               interpret: bool | None = None, local: bool = False,
+               loss_psum_axis: str | None = None):
+    """The full stage-2 closed loop; the refinement-stage dispatcher.
+
+    w_init/w_fp: (out, in) or stacked (B, out, in); x_last matches with
+    (n, in) trailing dims, hinv_blocks with (M, bs, bs) — the explicit
+    blockwise curvature inverses from
+    :func:`repro.core.rpiq._block_curvature_inv` (shared by both
+    backends, so eq. 13–14 rounds identically).  Returns the RPIQResult
+    tuple ``(w_q, w_cont, loss_history, proj_loss, iters_run)`` shaped
+    like the inputs.
+
+    ``impl``: "pallas" forces the fused kernel (interpret-mode off-TPU),
+    "xla" the ``while_loop``-of-``fori_loop`` reference body in
+    :mod:`repro.core.rpiq`, and "auto" picks pallas on TPU only when the
+    per-cell VMEM residency fits the budget — wide layers fall back to
+    XLA instead of failing in Mosaic.  ``t_max == 0`` always takes the
+    XLA body (the closed loop is empty; nothing to fuse).  ``interpret``
+    overrides the off-TPU interpret default (the TPU-export path in
+    benchmarks passes ``interpret=False``).
+
+    ``local=True`` marks a per-shard call under
+    :func:`rpiq_block_sharded`'s ``shard_map`` (same contract as
+    ``gptq_block``); ``loss_psum_axis`` names the mesh axis to fold the
+    per-shard Γ/projected-loss partials over BEFORE the deferred
+    early-stop/best bookkeeping — the row-sharded twin's one collective.
+    """
+    squeeze = w_init.ndim == 2
+    if squeeze:
+        w_init, w_fp, x_last, hinv_blocks, scales, zeros = (
+            a[None] for a in (w_init, w_fp, x_last, hinv_blocks, scales,
+                              zeros))
+    assert w_init.ndim == 3 and hinv_blocks.ndim == 4, \
+        (w_init.shape, hinv_blocks.shape)
+    b, out_dim, in_dim = w_init.shape
+    n = x_last.shape[-2]
+    assert in_dim % block_size == 0 and block_size % group_size == 0, \
+        (w_init.shape, block_size, group_size)
+    bo = block_out or (128 if out_dim >= 128 else _round_up(out_dim, 8))
+    # Same multi-device guard as gptq_block: outside shard_map, "auto"
+    # stays on XLA in multi-device processes (GSPMD partitions the pure-XLA
+    # loop exactly; a bare pallas_call carries no sharding rule) — the
+    # sharded executor calls back in through rpiq_block_sharded instead.
+    use_pallas = t_max >= 1 and (impl == "pallas" or (
+        impl == "auto" and _on_tpu()
+        and (local or jax.device_count() == 1)
+        and _rpiq_vmem_bytes(bo, in_dim, n, block_size)
+        <= _VMEM_BUDGET_BYTES
+        and _rpiq_hbm_bytes(b, _round_up(out_dim, bo), in_dim, t_max)
+        <= _RPIQ_HBM_BUDGET_BYTES))
+    if not use_pallas:
+        if loss_psum_axis is not None:
+            # only reachable when a sharded caller forced impl="xla" with
+            # rows still split — the twin prevents this (it gathers rows
+            # for XLA-resolved backends), but keep the seam total
+            raise ValueError("loss_psum_axis requires the pallas backend: "
+                             "the XLA body early-stops on per-lane "
+                             "data-dependent trip counts, which cannot "
+                             "psum in lockstep across row shards")
+        from repro.core.rpiq import _rpiq_xla_batched
+        res = _rpiq_xla_batched(w_init, w_fp, x_last, hinv_blocks, scales,
+                                zeros, bits=bits, group_size=group_size,
+                                block_size=block_size, alpha=alpha,
+                                t_max=t_max, early_stop=early_stop,
+                                symmetric=symmetric)
+        out = tuple(res)
+    else:
+        xf = x_last.astype(jnp.float32)
+        # Y_orig = X W_fp^T once per member (the single-instance reference)
+        y_orig = jnp.einsum("bni,boi->bno", xf, w_fp.astype(jnp.float32))
+        # grid expanded to column resolution ONCE (hoisted jnp.repeat)
+        s_full = jnp.repeat(scales.astype(jnp.float32), group_size, axis=-1)
+        z_full = jnp.repeat(zeros.astype(jnp.float32), group_size, axis=-1)
+        w0 = w_init.astype(jnp.float32)
+        out_pad = _round_up(out_dim, bo)
+        if out_pad != out_dim:
+            # padded rows: w=0 on a (s=1, z=0) grid — projections and
+            # residual contributions stay exactly 0, so real rows and the
+            # Γ partial sums are unperturbed
+            pad = ((0, 0), (0, out_pad - out_dim), (0, 0))
+            w0 = jnp.pad(w0, pad)
+            s_full = jnp.pad(s_full, pad, constant_values=1.0)
+            z_full = jnp.pad(z_full, pad)
+            y_orig = jnp.pad(y_orig, ((0, 0), (0, 0),
+                                      (0, out_pad - out_dim)))
+        hinv_flat = hinv_blocks.astype(jnp.float32).reshape(
+            b, in_dim, block_size)
+        w_cont, wp_all, _y_q, hist_raw, pls_raw = rpiq_block_pallas(
+            w0, y_orig, xf, hinv_flat, s_full, z_full, bits=bits,
+            group_size=group_size, block_size=block_size, alpha=alpha,
+            t_max=t_max, symmetric=symmetric, block_out=bo,
+            interpret=(not _on_tpu()) if interpret is None else interpret)
+        hist_raw, pls_raw = hist_raw[:, 0], pls_raw[:, 0]
+        if loss_psum_axis is not None:
+            # fold row-shard partials into the global Γ trajectory — every
+            # shard then replays identical bookkeeping for its rows
+            hist_raw = jax.lax.psum(hist_raw, loss_psum_axis)
+            pls_raw = jax.lax.psum(pls_raw, loss_psum_axis)
+        w_q, hist, proj_loss, iters = _rpiq_select(hist_raw, pls_raw,
+                                                   wp_all, t_max,
+                                                   early_stop)
+        out = (w_q[:, :out_dim], w_cont[:, :out_dim], hist, proj_loss,
+               iters)
+    if squeeze:
+        out = tuple(o[0] for o in out)
+    return out
+
+
+def rpiq_block_sharded(w_init: jax.Array, w_fp: jax.Array,
+                       x_last: jax.Array, h_damped: jax.Array,
+                       scales: jax.Array, zeros: jax.Array, *,
+                       h_count: jax.Array | None = None,
+                       x_count: jax.Array | None = None, mesh=None,
+                       lane_axis: str | None = None,
+                       row_axis: str | None = None, bits: int = 4,
+                       group_size: int = 128, block_size: int = 128,
+                       alpha: float = 0.01, t_max: int = 5,
+                       early_stop: bool = True, symmetric: bool = False,
+                       exact_gram: bool = False, impl: str = "auto",
+                       interpret: bool | None = None):
+    """Mesh-sharded stage-2 refinement: the :func:`gptq_block_sharded` twin.
+
+    w_init/w_fp: (B, out, in) stacked group slabs; h_damped: (B, in, in);
+    scales/zeros: (B, out, groups).  Lanes lay out over ``lane_axis``
+    exactly like stage 1 (members are independent linears, zero
+    collectives).  Rows differ from the GPTQ sweep: the closed loop's Γ,
+    early stop and best-projection choice are global over Cout, so a row
+    shard is NOT an independent unit —
+
+      - with the fused kernel the rounds run unconditionally and the
+        bookkeeping is deferred (rpiq_block), so row sharding stays exact
+        at the cost of ONE psum of the (B, t_max+1) loss partials per
+        stage dispatch (``loss_psum_axis``);
+      - the XLA body's while-loop trip count is data-dependent per lane —
+        a mid-loop psum would have shards disagree on trip counts — so
+        when the per-shard dispatch resolves to XLA the twin drops the
+        row axis (the shard_map in_specs then gather rows) and shards
+        lanes only.
+
+    The blockwise curvature pre-factor runs lane-local inside the
+    shard_map (each lane's Cholesky where its rows run, replicated over
+    the row axis like the stage-1 factor — DESIGN.md §2.6).  Either axis
+    may be None; both None degrades to the single-device dispatcher.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core.rpiq import rpiq_refine_batched
+
+    kw = dict(bits=bits, group_size=group_size, block_size=block_size,
+              alpha=alpha, t_max=t_max, early_stop=early_stop,
+              symmetric=symmetric, exact_gram=exact_gram)
+    b, out_dim, in_dim = w_init.shape
+    n = x_last.shape[-2]
+    if row_axis is not None:
+        rows_local = out_dim // int(mesh.shape[row_axis])
+        lanes_local = b // (int(mesh.shape[lane_axis])
+                            if lane_axis is not None else 1)
+        bo = 128 if rows_local >= 128 else _round_up(max(rows_local, 1), 8)
+        pallas_local = t_max >= 1 and (impl == "pallas" or (
+            impl == "auto" and _on_tpu()
+            and _rpiq_vmem_bytes(bo, in_dim, n, block_size)
+            <= _VMEM_BUDGET_BYTES
+            and _rpiq_hbm_bytes(lanes_local, _round_up(rows_local, bo),
+                                in_dim, t_max) <= _RPIQ_HBM_BUDGET_BYTES))
+        if not pallas_local:
+            row_axis = None
+    if lane_axis is None and row_axis is None:
+        return tuple(rpiq_refine_batched(
+            w_init, w_fp, x_last, h_damped, scales, zeros, h_count=h_count,
+            x_count=x_count, impl=impl, interpret=interpret, **kw))
+
+    slab = P(lane_axis, row_axis, None)
+    lane3 = P(lane_axis, None, None)
+    in_specs = [slab, slab, lane3, lane3, slab, slab]
+    args = [w_init, w_fp, x_last, h_damped, scales, zeros]
+    if h_count is not None:
+        in_specs.append(P(lane_axis))
+        args.append(h_count)
+    if x_count is not None:
+        in_specs.append(P(lane_axis))
+        args.append(x_count)
+
+    def local_refine(*a):
+        wl, wfl, xl, hdl, sl, zl = a[:6]
+        rest = list(a[6:])
+        hcl = rest.pop(0) if h_count is not None else None
+        xcl = rest.pop(0) if x_count is not None else None
+        return tuple(rpiq_refine_batched(
+            wl, wfl, xl, hdl, sl, zl, h_count=hcl, x_count=xcl, impl=impl,
+            interpret=interpret, local=True, loss_psum_axis=row_axis, **kw))
+
+    # loss history / proj_loss / iters are identical across row shards
+    # after the psum fold — lane-sharded only (check_rep off, as in the
+    # stage-1 twin)
+    out_specs = (slab, slab, P(lane_axis, None), P(lane_axis),
+                 P(lane_axis))
+    return shard_map(local_refine, mesh=mesh, in_specs=tuple(in_specs),
+                     out_specs=out_specs, check_rep=False)(*args)
+
+
+# ---------------------------------------------------------------------------
 # Mamba-1 selective scan
 # ---------------------------------------------------------------------------
 
@@ -271,4 +534,5 @@ def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
 
 
 __all__ = ["hessian_accum", "w4a16_matmul", "quant_pack", "gptq_block",
-           "gptq_block_sharded", "selective_scan"]
+           "gptq_block_sharded", "rpiq_block", "rpiq_block_sharded",
+           "selective_scan"]

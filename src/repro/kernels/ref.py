@@ -133,6 +133,84 @@ def gptq_block_ref(w, hinv_u, *, bits: int = 4, group_size: int = 128,
     return w, scales, zeros, np.float32(tot_err)
 
 
+def rpiq_block_ref(w_init, w_fp, x_last, hinv_blocks, scales, zeros, *,
+                   bits: int = 4, group_size: int = 128,
+                   block_size: int = 128, alpha: float = 0.01,
+                   t_max: int = 5, early_stop: bool = True,
+                   symmetric: bool = False):
+    """Pure-NumPy RPIQ stage-2 closed loop — the oracle for rpiq_block.
+
+    w_init/w_fp: (out, in) or (B, out, in); x_last matches with (n, in)
+    trailing dims; hinv_blocks: (M, bs, bs) / (B, M, bs, bs) explicit
+    blockwise curvature inverses (``core/rpiq._block_curvature_inv``).
+    Returns the RPIQResult tuple ``(w_q, w_cont, loss_history, proj_loss,
+    iters_run)``.  Mirrors ``core/rpiq._rpiq_core`` step for step:
+    directed residual, one-matmul LS solve against the pre-factored
+    inverse, grid projection, damped update, immediate Y_q update, Γ
+    early stop and strict-improvement best-projection tracking.
+    """
+    if np.ndim(w_init) == 3:
+        outs = [rpiq_block_ref(np.asarray(w_init)[i], np.asarray(w_fp)[i],
+                               np.asarray(x_last)[i],
+                               np.asarray(hinv_blocks)[i],
+                               np.asarray(scales)[i], np.asarray(zeros)[i],
+                               bits=bits, group_size=group_size,
+                               block_size=block_size, alpha=alpha,
+                               t_max=t_max, early_stop=early_stop,
+                               symmetric=symmetric)
+                for i in range(np.shape(w_init)[0])]
+        return tuple(np.stack([o[k] for o in outs]) for k in range(5))
+
+    w0 = np.array(w_init, np.float32)
+    x = np.array(x_last, np.float32)
+    hinv = np.array(hinv_blocks, np.float32)
+    out_dim, in_dim = w0.shape
+    assert in_dim % block_size == 0 and block_size % group_size == 0
+    n_blocks = in_dim // block_size
+    y_orig = x @ np.array(w_fp, np.float32).T
+    s = np.repeat(np.array(scales, np.float32), group_size, axis=1)
+    z = np.repeat(np.array(zeros, np.float32), group_size, axis=1)
+
+    def project(b, sl, zl):
+        if symmetric:
+            lo, hi = -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1
+            return np.clip(np.round(b / sl), lo, hi) * sl
+        qmax = 2.0 ** bits - 1.0
+        q = np.clip(np.round(b / sl) + zl, 0.0, qmax)
+        return (q - zl) * sl
+
+    w = w0.copy()
+    y_q = x @ w.T
+    hist = np.full(t_max + 1, np.inf, np.float32)
+    hist[0] = np.float32(np.sum((y_orig - y_q) ** 2))
+    best_w, best_loss = w0.copy(), hist[0]
+    iters = 0
+    for t in range(t_max):
+        for i in range(n_blocks):
+            c1, c2 = i * block_size, (i + 1) * block_size
+            b_old = w[:, c1:c2]
+            x_i = x[:, c1:c2]
+            y_qi = x_i @ b_old.T
+            d_i = y_orig - (y_q - y_qi)
+            rhs = x_i.T @ d_i
+            b_star = (hinv[i] @ rhs).T
+            b_proj = project(b_star, s[:, c1:c2], z[:, c1:c2])
+            b_new = b_old + np.float32(alpha) * (b_proj - b_old)
+            y_q = y_q - y_qi + x_i @ b_new.T
+            w = w.copy()
+            w[:, c1:c2] = b_new
+        gamma = np.float32(np.sum((y_orig - y_q) ** 2))
+        hist[t + 1] = gamma
+        w_proj = project(w, s, z)
+        ploss = np.float32(np.sum((y_orig - x @ w_proj.T) ** 2))
+        iters = t + 1
+        if ploss < best_loss:
+            best_w, best_loss = w_proj, ploss
+        if early_stop and gamma >= hist[t] * (1.0 - 1e-6):
+            break
+    return (best_w, w, hist, np.float32(best_loss), np.int32(iters))
+
+
 def quant_pack_ref(w: jax.Array, scales: jax.Array, zeros: jax.Array,
                    group_size: int) -> jax.Array:
     """Quantize to 4-bit codes on a fixed grid and pack 2 codes/byte.

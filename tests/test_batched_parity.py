@@ -151,6 +151,38 @@ class TestBatchedRPIQ:
                                    exact_gram=True)
         assert bool(jnp.all(res2.proj_loss <= res2.loss_history[:, 0] + 1e-4))
 
+    @pytest.mark.pallas
+    @pytest.mark.parametrize("exact_gram,alpha", [(False, 0.1), (True, 1.0)])
+    def test_exact_gram_iters_parity_across_impls(self, stack_problem,
+                                                  exact_gram, alpha):
+        """iters_run (early-stop round count) must agree lane for lane
+        between the singleton path, the batched XLA body, and the fused
+        kernel — in both curvature modes."""
+        p = stack_problem
+        Hd, res1 = self._stage1(p)
+        xc = jnp.full((p["B"],), p["N"], jnp.int32)
+        kw = dict(bits=4, group_size=32, block_size=64, alpha=alpha,
+                  t_max=5, exact_gram=exact_gram)
+        res_b = rpiq_refine_batched(res1.w_q, p["W"], p["X"], Hd,
+                                    res1.scales, res1.zeros,
+                                    h_count=p["st"].count, x_count=xc,
+                                    impl="xla", **kw)
+        res_k = rpiq_refine_batched(res1.w_q, p["W"], p["X"], Hd,
+                                    res1.scales, res1.zeros,
+                                    h_count=p["st"].count, x_count=xc,
+                                    impl="pallas", **kw)
+        np.testing.assert_array_equal(np.asarray(res_b.iters_run),
+                                      np.asarray(res_k.iters_run))
+        np.testing.assert_allclose(np.asarray(res_b.w_q),
+                                   np.asarray(res_k.w_q), atol=1e-6)
+        for i in range(p["B"]):
+            r = rpiq_refine(res1.w_q[i], p["W"][i], p["X"][i], Hd[i],
+                            res1.scales[i], res1.zeros[i],
+                            h_count=p["st"].count[i], x_count=xc[i], **kw)
+            assert int(r.iters_run) == int(res_b.iters_run[i])
+            np.testing.assert_allclose(np.asarray(res_b.w_q[i]),
+                                       np.asarray(r.w_q), atol=1e-5)
+
 
 class TestPlanExecution:
     def _members(self, p, starve=()):

@@ -144,6 +144,93 @@ def test_gptq_block_sharded_pallas_interpret():
 
 
 # ---------------------------------------------------------------------------
+# Kernel-dispatch level: rpiq_block_sharded == rpiq_block (stage-2 twin)
+# ---------------------------------------------------------------------------
+
+def _rpiq_inputs(b=4, out_dim=32, in_dim=64, n=128):
+    w, u = _sweep_inputs(b, out_dim, in_dim)
+    from repro.core.gptq import gptq_quantize_batched
+    res1 = gptq_quantize_batched(w, u, bits=4, group_size=32, blocksize=32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, n, in_dim))
+    h = jnp.einsum("bni,bnj->bij", x, x,
+                   precision=jax.lax.Precision.HIGHEST)
+    hd = hess.damped(hess.HessianState(h, None), 0.01)
+    return w, x, hd, res1
+
+
+_RPIQ_KW = dict(bits=4, group_size=32, block_size=32, alpha=1.0, t_max=4,
+                exact_gram=True)
+
+
+@needs_mesh
+def test_rpiq_block_sharded_lane_axis_bitwise():
+    """Lane-only sharding: members are fully independent, so the sharded
+    twin must match the single-device dispatch BITWISE."""
+    w, x, hd, res1 = _rpiq_inputs()
+    ref = kops.rpiq_block_sharded(res1.w_q, w, x, hd, res1.scales,
+                                  res1.zeros, mesh=None, lane_axis=None,
+                                  row_axis=None, impl="xla", **_RPIQ_KW)
+    out = kops.rpiq_block_sharded(res1.w_q, w, x, hd, res1.scales,
+                                  res1.zeros, mesh=_mesh22(),
+                                  lane_axis="data", row_axis=None,
+                                  impl="xla", **_RPIQ_KW)
+    for name, a, b in zip(("w_q", "w_cont", "hist", "proj_loss", "iters"),
+                          ref, out):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(jax.device_get(b)),
+                                      err_msg=name)
+
+
+@needs_mesh
+@pytest.mark.parametrize("axes", [("data", "model"), (None, "model")])
+def test_rpiq_block_sharded_xla_gathers_rows(axes):
+    """With an XLA-resolved backend the closed loop cannot row-shard (the
+    while-loop trip count is per-lane data-dependent), so the twin gathers
+    rows and shards lanes only — results match single-device."""
+    w, x, hd, res1 = _rpiq_inputs()
+    ref = kops.rpiq_block_sharded(res1.w_q, w, x, hd, res1.scales,
+                                  res1.zeros, mesh=None, lane_axis=None,
+                                  row_axis=None, impl="xla", **_RPIQ_KW)
+    out = kops.rpiq_block_sharded(res1.w_q, w, x, hd, res1.scales,
+                                  res1.zeros, mesh=_mesh22(),
+                                  lane_axis=axes[0], row_axis=axes[1],
+                                  impl="xla", **_RPIQ_KW)
+    np.testing.assert_array_equal(np.asarray(ref[4]),
+                                  np.asarray(jax.device_get(out[4])))
+    for name, a, b in zip(("w_q", "w_cont", "hist", "proj_loss"), ref, out):
+        np.testing.assert_allclose(np.asarray(a),
+                                   np.asarray(jax.device_get(b)),
+                                   rtol=1e-6, atol=1e-7, err_msg=name)
+
+
+@needs_mesh
+@pytest.mark.pallas
+def test_rpiq_block_sharded_pallas_row_psum():
+    """Per-shard fused kernel (interpret off-TPU) with the row axis kept:
+    the Γ/projected-loss partials psum-fold across row shards before the
+    deferred bookkeeping, so early stops and the best projection match the
+    single-device kernel."""
+    w, x, hd, res1 = _rpiq_inputs(b=2, out_dim=16, in_dim=32, n=64)
+    ref = kops.rpiq_block_sharded(res1.w_q, w, x, hd, res1.scales,
+                                  res1.zeros, mesh=None, lane_axis=None,
+                                  row_axis=None, impl="pallas", **_RPIQ_KW)
+    out = kops.rpiq_block_sharded(res1.w_q, w, x, hd, res1.scales,
+                                  res1.zeros, mesh=_mesh22(),
+                                  lane_axis="data", row_axis="model",
+                                  impl="pallas", **_RPIQ_KW)
+    np.testing.assert_array_equal(np.asarray(ref[4]),
+                                  np.asarray(jax.device_get(out[4])))
+    np.testing.assert_allclose(np.asarray(ref[0]),
+                               np.asarray(jax.device_get(out[0])),
+                               rtol=1e-6, atol=1e-6)
+    ha = np.asarray(ref[2])
+    hb = np.asarray(jax.device_get(out[2]))
+    fin = np.isfinite(ha)
+    assert (fin == np.isfinite(hb)).all()
+    np.testing.assert_allclose(ha[fin], hb[fin], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # Executor level: sharded plan == single-device batched plan
 # ---------------------------------------------------------------------------
 
