@@ -1,6 +1,7 @@
 """Shared benchmark helpers: train a small LM, evaluate PPL/accuracy."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, Tuple
 
@@ -20,6 +21,11 @@ def bench_config(arch: str = "opt-proxy", **model_over) -> Config:
     for k, v in model_over.items():
         setattr(cfg.model, k, v)
     cfg.model.__post_init__()
+    # CI smoke hook (scripts/check.sh): force the layer-walk schedule for
+    # every benchmarked quantize_model run, e.g. REPRO_BENCH_PIPELINE=overlap
+    pl = os.environ.get("REPRO_BENCH_PIPELINE")
+    if pl:
+        cfg.quant.pipeline = pl
     return cfg
 
 

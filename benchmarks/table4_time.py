@@ -34,10 +34,23 @@ closed-loop cost is visible on its own —
     container, not the hardware dispatch story; for the same reason the
     interpret-mode ``pallas`` WALL times here do not represent TPU.)
 
+The ``pipeline`` field records the layer-walk schedule behind every row
+(core/stream.py): the impl rows run the default ``serial`` walk; each
+config additionally gets one ``pipeline="overlap"`` row (impl ``xla``) —
+the streaming scheduler A/B, compared against the matching serial row in
+``overlap_delta_s``/``overlap_speedup``. On this CPU container the two
+schedules share one synchronous device stream, so the overlap win is
+bounded by host-side stall removal (deferred per-stage sync + record
+materialization) and is largest where executor time dominates (the MoE
+row); the speculative capture-ahead is extra stream work here, while on
+TPU meshes it rides the executor gap (DESIGN.md §2.7 — same family of
+caveat as the interpret-mode pallas wall times below).
+
 Row schema and regeneration contract: docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -123,13 +136,21 @@ def _timed_repeats(cfg, params, calib, repeats: int):
 
 
 def _time_impls(cfg, params, calib, label: str, repeats: int = 3,
-                op_counts: bool = True) -> list:
+                op_counts: bool = True,
+                impls: tuple = ("xla", "pallas"),
+                pipeline: str = None) -> list:
     """Flat BENCH rows: batched executor with BOTH per-stage backends set
-    to the row's impl (stage-1 gptq_block + stage-2 rpiq_block)."""
+    to the row's impl (stage-1 gptq_block + stage-2 rpiq_block).
+    ``pipeline`` overrides ``quant.pipeline`` for these rows — the
+    serial-vs-overlap A/B reuses this exact scaffold (same cold/warm
+    protocol, same row schema) via :func:`_time_overlap`."""
     ops_by_impl = _quant_stage_op_counts(cfg) if op_counts else {}
     rows = []
     cfg.quant.batched_executor = True
-    for impl in ("xla", "pallas"):
+    prev_pipeline = cfg.quant.pipeline
+    if pipeline is not None:
+        cfg.quant.pipeline = pipeline
+    for impl in impls:
         cfg.quant.gptq_impl = impl
         cfg.quant.rpiq_impl = impl
         jax.clear_caches()
@@ -141,14 +162,45 @@ def _time_impls(cfg, params, calib, label: str, repeats: int = 3,
         ops = ops_by_impl.get(impl, {}) or {}
         rows.append({
             "config": label, "impl": impl,
+            "pipeline": cfg.quant.pipeline,
             "cold_s": round(cold, 2), "warm_s": round(wall, 2),
             "executor_s": round(best[0], 3),
             "stage1_s": round(best[1], 3), "stage2_s": round(best[2], 3),
             "xla_ops": ops.get("s1"), "xla_ops_s2": ops.get("s2"),
         })
+    cfg.quant.pipeline = prev_pipeline
     cfg.quant.gptq_impl = "auto"
     cfg.quant.rpiq_impl = "auto"
     return rows
+
+
+def _time_overlap(cfg, params, calib, label: str, repeats: int = 3) -> list:
+    """The streaming-scheduler A/B row: batched executor, xla backends,
+    ``quant.pipeline=overlap`` (cold + best-of-``repeats`` warm).
+
+    Skipped under the ``REPRO_BENCH_PIPELINE`` smoke override — it
+    already forces every impl row onto one schedule, so this row would
+    re-run an identical configuration with no serial row to compare to.
+    """
+    if os.environ.get("REPRO_BENCH_PIPELINE"):
+        return []
+    return _time_impls(cfg, params, calib, label, repeats=repeats,
+                       op_counts=False, impls=("xla",), pipeline="overlap")
+
+
+def _overlap_summary(row: dict) -> None:
+    """Fold the serial-vs-overlap warm delta into the table row (the
+    matching serial reference is the impl="xla" row of the same config)."""
+    serial = next((b for b in row["bench"] if b["impl"] == "xla"
+                   and b.get("pipeline") != "overlap"), None)
+    ov = next((b for b in row["bench"]
+               if b.get("pipeline") == "overlap"), None)
+    if serial is None or ov is None:
+        return
+    row["t_overlap_s"] = ov["warm_s"]
+    row["overlap_delta_s"] = round(serial["warm_s"] - ov["warm_s"], 2)
+    row["overlap_speedup"] = round(
+        serial["warm_s"] / max(ov["warm_s"], 1e-9), 2)
 
 
 def _time_exec_paths(cfg, params, calib, repeats: int = 5) -> dict:
@@ -223,13 +275,16 @@ def run(tiny: bool = False) -> list:
         row.update(_time_exec_paths(cfg, params, calib, repeats=repeats))
         row["bench"] = [
             {"config": label, "impl": "perlinear",
+             "pipeline": cfg.quant.pipeline,
              "cold_s": row["t_perlinear_cold_s"],
              "warm_s": row["t_perlinear_s"],
              "executor_s": row["t_perlinear_exec_s"],
              "stage1_s": row["t_perlinear_s1_s"],
              "stage2_s": row["t_perlinear_s2_s"],
              "xla_ops": None, "xla_ops_s2": None},
-        ] + _time_impls(cfg, params, calib, label, repeats=repeats)
+        ] + _time_impls(cfg, params, calib, label, repeats=repeats) \
+          + _time_overlap(cfg, params, calib, label, repeats=repeats)
+        _overlap_summary(row)
         rows.append(row)
 
     if tiny:
@@ -248,14 +303,20 @@ def run(tiny: bool = False) -> list:
     label = f"moe-{cfg.model.name}"
     row["bench"] = [
         {"config": label, "impl": "perlinear",
+         "pipeline": cfg.quant.pipeline,
          "cold_s": row["t_perlinear_cold_s"], "warm_s": row["t_perlinear_s"],
          "executor_s": row["t_perlinear_exec_s"],
          "stage1_s": row["t_perlinear_s1_s"],
          "stage2_s": row["t_perlinear_s2_s"],
          "xla_ops": None, "xla_ops_s2": None},
-    ] + _time_impls(cfg, params, calib, label)
+    ] + _time_impls(cfg, params, calib, label) \
+      + _time_overlap(cfg, params, calib, label)
+    _overlap_summary(row)
     # the headline fused-kernel claims, measured (≥10× required per stage):
-    impls = {b["impl"]: b for b in row["bench"]}
+    # (serial impl rows only — the overlap A/B row shares impl="xla" but
+    # carries no op counts)
+    impls = {b["impl"]: b for b in row["bench"]
+             if b.get("pipeline") != "overlap"}
     if impls.get("pallas", {}).get("xla_ops"):
         row["op_reduction"] = round(
             impls["xla"]["xla_ops"] / impls["pallas"]["xla_ops"], 1)

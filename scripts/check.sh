@@ -37,3 +37,10 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # refresh the trajectory with a full `benchmarks.run table4` when perf moves)
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table4 --tiny
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table5 --tiny
+
+# overlap-pipeline smoke: the streaming layer-walk scheduler
+# (quant.pipeline=overlap, core/stream.py) must stay runnable end to end
+# on the same tiny table4 leg (parity itself is pinned in
+# tests/test_pipeline_stream.py; this guards the bench/launch plumbing)
+REPRO_BENCH_PIPELINE=overlap \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table4 --tiny

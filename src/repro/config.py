@@ -208,6 +208,21 @@ class QuantConfig:
     #                                 over data, Cout row tiles over model;
     #                                 non-divisible groups stay unsharded
     #                                 (launch/mesh.make_quant_mesh)
+    pipeline: str = "serial"        # layer-walk scheduling (core/stream.py,
+    #                                 DESIGN.md §2.7): "serial" = capture →
+    #                                 execute → propagate strictly alternate
+    #                                 per layer (per-stage block_until_ready
+    #                                 timing); "overlap" = streaming scheduler
+    #                                 — executor dispatches stay async, the
+    #                                 next layer's capture forward is
+    #                                 dispatched speculatively on the
+    #                                 pre-quantization residual stream while
+    #                                 the executor is in flight, then repaired
+    #                                 exactly after the scatter lands (layers
+    #                                 whose signature marks the repair unsound
+    #                                 — routed MoE — re-capture serially).
+    #                                 Artifacts are bitwise-identical either
+    #                                 way (tests/test_pipeline_stream.py)
 
 
 @dataclass

@@ -6,3 +6,5 @@ from repro.core.hessian import (HessianState, init_hessian, accumulate,
                                 damped, stack_states)  # noqa: F401
 from repro.core.plan import (PlanMember, QuantGroup, QuantPlan, QuantReport,
                              LinearRecord, build_plan, execute_plan)  # noqa: F401
+from repro.core.stream import (LayerStep, LayerWalker, StreamSwitch,
+                               run_walker)  # noqa: F401

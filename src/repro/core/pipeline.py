@@ -35,14 +35,25 @@ the paper assumes:
      fewer than one group of tokens become an RTN fallback *mask inside
      the group* (recorded in the report as before).
 
+The walk itself is architecture-agnostic: both decoder-only and enc-dec
+models (MoE layers included) describe themselves as ONE
+:class:`~repro.core.stream.LayerWalker` — a flat list of
+``LayerStep{apply_fn, param_subtree, hs_slot, signature}`` items built by
+:func:`_walker_decoder_only` / :func:`_walker_encdec` — and the scheduler
+in :mod:`repro.core.stream` drains it. ``quant.pipeline`` selects the
+schedule: ``serial`` alternates capture/execute/propagate per layer with
+per-stage synchronized timings; ``overlap`` keeps executor dispatches
+async and speculatively runs the next layer's capture forward on the
+pre-quantization stream, repairing it exactly after the scatter lands
+(DESIGN.md §2.7). Both schedules produce bitwise-identical artifacts.
+
 Returns float params whose quantized linears hold *on-grid* values plus a
 ``QuantReport`` (per-linear Γ histories = paper Table 5 / Fig. 5) and a
-packer to int4 serving artifacts (QuantizedTensor leaves). Stage timings
-are synchronized (``jax.block_until_ready``) so the report measures
-compute, not async dispatch.
+packer to int4 serving artifacts (QuantizedTensor leaves).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -53,9 +64,11 @@ import numpy as np
 from repro.config import Config
 from repro.core import hessian as hess
 from repro.core import plan as qplan
+from repro.core import stream as qstream
 from repro.core.plan import (LinearRecord, MemberResult,  # noqa: F401
                              PlanMember, QuantReport)
 from repro.core.quant import QuantizedTensor, pack_int4
+from repro.core.stream import LayerStep, LayerWalker, StreamSwitch
 from repro.models import transformer as T
 from repro.models import moe as moe_mod
 from repro.models.linear import Tap
@@ -77,6 +90,45 @@ from repro.models.layers import embed, norm, sinusoidal_positions
 # collapse the batch index to 0; the encoder-decoder decoder bakes
 # ``enc_out[bi]`` into the trace, so it keys per batch.
 # ---------------------------------------------------------------------------
+
+class ForwardCache(dict):
+    """Per-run compiled-forward cache with hit/miss counters.
+
+    A plain dict keyed by (fwd_key, batch-index, collect, layer
+    signature); the counters make capture-forward reuse observable next
+    to :func:`repro.core.plan.executor_cache_stats` (the overlap
+    scheduler's speculative captures share entries with their exact
+    repairs, so speculation never doubles compiles).
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, default=None):
+        fn = super().get(key, default)
+        if fn is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return fn
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses}
+
+
+_LAST_FWD_STATS: Dict[str, int] = {"hits": 0, "misses": 0}
+
+
+def capture_cache_stats() -> Dict[str, int]:
+    """{hits, misses} of the capture/propagate forward cache of the most
+    recent :func:`quantize_model` run (API symmetry with
+    ``plan.executor_cache_stats()``). Only the counters outlive the run —
+    the cache itself (compiled forwards + their baked closure constants)
+    stays run-scoped and is dropped with it."""
+    return dict(_LAST_FWD_STATS)
+
 
 def _tree_signature(tree) -> Tuple:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -133,6 +185,24 @@ def _linear_names_in(tree: Dict, prefix: str = "") -> List[str]:
 
 _QUANT_SUBTREES = ("mixer", "mlp", "xattn")   # norms/embeds stay fp
 _MOE_WNAMES = ("w_gate", "w_up", "w_down")
+
+
+def _is_moe_layer(layer_params: Dict) -> bool:
+    mlp = layer_params.get("mlp")
+    return isinstance(mlp, dict) and "w_gate" in mlp
+
+
+def _layer_repair_sound(layer_params: Dict) -> bool:
+    """Is the capture-ahead Hessian repair sound for this layer signature?
+
+    Routed-MoE layers are not: their token routing can shift once the
+    previous layer's scatter lands (the speculative dispatch would route
+    differently than the repaired one), and the per-expert capture runs
+    host-side dispatch bookkeeping (``moe.dispatch`` counts) that cannot
+    ride the async queue. The overlap scheduler degrades those steps to
+    serial re-capture (tests pin this via monkeypatching this predicate).
+    """
+    return not _is_moe_layer(layer_params)
 
 
 def _moe_members(cfg: Config, p_moe: Dict, xs: List[jax.Array],
@@ -207,28 +277,49 @@ def _scatter_moe(p_moe: Dict, results: Dict[str, MemberResult],
     return new
 
 
-def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
-                   apply_fn, report: QuantReport,
-                   fwd_cache: Optional[Dict] = None,
-                   fwd_key: Tuple = ("layer",),
-                   batch_dependent: bool = False,
-                   mesh=None) -> Tuple[Dict, List]:
-    """Quantize one layer's linears via the plan, then propagate.
+# ---------------------------------------------------------------------------
+# Per-step primitives (capture / plan / scatter / propagate)
+#
+# These are the stage bodies the stream scheduler composes — the serial
+# schedule chains them per layer, the overlap schedule interleaves them
+# across adjacent layers (core/stream.py).
+# ---------------------------------------------------------------------------
 
-    ``apply_fn(params, h, batch_index) -> h_out`` runs the layer.  With
-    ``quant.jit_capture`` (default) and a ``fwd_cache`` dict, the capture
-    and propagate forwards run through :func:`_layer_forward_jit` —
-    compiled once per (fwd_key, layer signature) and reused by every
-    identically shaped layer in the stack; otherwise they run eagerly
-    (legacy path).  ``mesh`` forwards to
-    :func:`repro.core.plan.execute_plan` for sharded group execution
-    (capture itself stays single-device — only executor work scales with
-    the mesh).  Returns (new_layer_params, new_hs).
+@dataclasses.dataclass
+class CaptureResult:
+    """One layer's tapped calibration state.
+
+    ``h_out`` holds the capture forward's per-batch outputs — the layer's
+    PRE-quantization residual stream, which the overlap scheduler feeds
+    to the next step's speculative capture (it exists before the
+    executor finishes). Collected only on request: the serial schedule —
+    and the speculative pass itself — would otherwise pin n_batches
+    activation arrays per step for nothing.
     """
+    hessians: Dict[str, hess.HessianState]
+    last_x: Dict[str, jax.Array]
+    moe_xs: List[jax.Array]
+    h_out: Optional[List[jax.Array]]
+    is_moe: bool
+
+
+def capture_layer(cfg: Config, step: LayerStep, hs: List[jax.Array],
+                  fwd_cache: Optional[Dict] = None,
+                  speculative: bool = False,
+                  collect_h_out: bool = False) -> CaptureResult:
+    """Stage (a): stream Hessians over all batches, keep last inputs.
+
+    ``speculative`` marks a capture-ahead pass (overlap scheduler): same
+    dispatches on a different stream, results discarded by the exact
+    repair — the flag only documents intent at call sites.
+    ``collect_h_out`` retains the per-batch forward outputs (the
+    pre-quantization stream the scheduler speculates on).
+    """
+    del speculative
     qc = cfg.quant
+    layer_params = step.resolve_params()
     use_jit = qc.jit_capture and fwd_cache is not None
-    is_moe = "mlp" in layer_params and "w_gate" in layer_params.get("mlp", {})
-    # 1. capture: stream Hessians, keep last batch inputs
+    is_moe = _is_moe_layer(layer_params)
     hessians: Dict[str, hess.HessianState] = {}
     last_x: Dict[str, jax.Array] = {}
     moe_xs: List[jax.Array] = []     # per-batch MoE block inputs (router tap)
@@ -254,34 +345,49 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
         hessians[name] = hess.accumulate(hessians[name], x2)
         last_x[name] = x2        # overwritten per batch → last batch stays
 
+    h_out: Optional[List[jax.Array]] = [] if collect_h_out else None
     for bi, h in enumerate(hs):
         if use_jit:
-            _, recs = _layer_forward_jit(fwd_cache, fwd_key, apply_fn,
-                                         layer_params, h, bi,
-                                         batch_dependent)
+            out, recs = _layer_forward_jit(fwd_cache, step.fwd_key,
+                                           step.apply_fn, layer_params, h,
+                                           bi, step.batch_dependent)
             for name, xs in recs.items():
                 for x in xs:
                     on_record(name, x)
         else:
             with Tap(on_record=on_record):
-                apply_fn(layer_params, h, bi)
+                out = step.apply_fn(layer_params, h, bi)
+        if collect_h_out:
+            h_out.append(out)
+    return CaptureResult(hessians, last_x, moe_xs, h_out, is_moe)
 
-    # 2. plan: dense taps + stacked MoE expert slices as uniform members
-    new_params = jax.tree_util.tree_map(lambda x: x, layer_params)
+
+def plan_layer(cfg: Config, step: LayerStep, cap: CaptureResult,
+               hs: List[jax.Array]) -> Tuple[Dict, List[str], "qplan.QuantPlan"]:
+    """Stage (b): dense taps + stacked MoE expert slices → QuantPlan.
+
+    Returns (fresh param-subtree copy, sorted dense names, plan).
+    """
+    qc = cfg.quant
+    new_params = jax.tree_util.tree_map(lambda x: x, step.resolve_params())
     members: List[PlanMember] = []
-    dense_names = sorted(hessians.keys())
+    dense_names = sorted(cap.hessians.keys())
     for name in dense_names:
         node = _resolve(new_params, name)
         members.append(PlanMember(
-            name, jnp.asarray(node["w"], jnp.float32).T, hessians[name],
-            last_x[name], x_count=None))
-    if is_moe:
-        assert len(moe_xs) == len(hs), "router tap missed batches"
-        members.extend(_moe_members(cfg, new_params["mlp"], moe_xs, "mlp"))
-    plan = qplan.build_plan(qc, members)
+            name, jnp.asarray(node["w"], jnp.float32).T, cap.hessians[name],
+            cap.last_x[name], x_count=None))
+    if cap.is_moe:
+        assert len(cap.moe_xs) == len(hs), "router tap missed batches"
+        members.extend(_moe_members(cfg, new_params["mlp"], cap.moe_xs,
+                                    "mlp"))
+    return new_params, dense_names, qplan.build_plan(qc, members)
 
-    # 3. execute groups (batched GPTQ + RPIQ) and scatter back
-    results = qplan.execute_plan(qc, plan, report, mesh=mesh)
+
+def scatter_layer(new_params: Dict, dense_names: List[str],
+                  cap: CaptureResult,
+                  results: Dict[str, MemberResult]) -> Dict:
+    """Stage (d, first half): write on-grid results back into the subtree."""
     for name in dense_names:
         res = results[name]
         if res.w_q is None:
@@ -291,20 +397,206 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
         if res.grid is not None:
             # stage-1 grid travels with the weight → exact int4 packing
             node["qscales"], node["qzeros"] = res.grid
-    if is_moe:
+    if cap.is_moe:
         new_params["mlp"] = _scatter_moe(new_params["mlp"], results, "mlp")
+    return new_params
 
-    # 4. propagate quantized activations (same compiled forward; the
-    # quantized params carry extra grid leaves, so they key their own
-    # cross-layer cache entry)
+
+def propagate_layer(cfg: Config, step: LayerStep, new_params: Dict,
+                    hs: List[jax.Array],
+                    fwd_cache: Optional[Dict] = None) -> List[jax.Array]:
+    """Stage (d, second half): re-run the layer with quantized params so
+    the next layer's Hessians see the quantized network (same compiled
+    forward family; the quantized params carry extra grid leaves, so they
+    key their own cross-layer cache entry)."""
+    use_jit = cfg.quant.jit_capture and fwd_cache is not None
     if use_jit:
-        new_hs = [_layer_forward_jit(fwd_cache, fwd_key, apply_fn,
-                                     new_params, h, bi, batch_dependent,
-                                     collect=False)[0]
-                  for bi, h in enumerate(hs)]
-    else:
-        new_hs = [apply_fn(new_params, h, bi) for bi, h in enumerate(hs)]
-    return new_params, new_hs
+        return [_layer_forward_jit(fwd_cache, step.fwd_key, step.apply_fn,
+                                   new_params, h, bi, step.batch_dependent,
+                                   collect=False)[0]
+                for bi, h in enumerate(hs)]
+    return [step.apply_fn(new_params, h, bi) for bi, h in enumerate(hs)]
+
+
+def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
+                   apply_fn, report: QuantReport,
+                   fwd_cache: Optional[Dict] = None,
+                   fwd_key: Tuple = ("layer",),
+                   batch_dependent: bool = False,
+                   mesh=None) -> Tuple[Dict, List]:
+    """Quantize one layer's linears via the plan, then propagate (serial).
+
+    The single-layer convenience wrapper over the per-step primitives
+    above — what the serial schedule does per step. ``apply_fn(params, h,
+    batch_index) -> h_out`` runs the layer; ``mesh`` forwards to
+    :func:`repro.core.plan.execute_plan` for sharded group execution
+    (capture itself stays single-device — only executor work scales with
+    the mesh). Returns (new_layer_params, new_hs).
+    """
+    step = LayerStep(name="layer", params=layer_params, apply_fn=apply_fn,
+                     hs_slot="h", fwd_key=fwd_key, store=lambda p: None,
+                     batch_dependent=batch_dependent)
+    cap = capture_layer(cfg, step, hs, fwd_cache)
+    new_params, dense_names, plan = plan_layer(cfg, step, cap, hs)
+    results = qplan.execute_plan(cfg.quant, plan, report, mesh=mesh)
+    scatter_layer(new_params, dense_names, cap, results)
+    return new_params, propagate_layer(cfg, step, new_params, hs, fwd_cache)
+
+
+# ---------------------------------------------------------------------------
+# LayerWalkers: each architecture described once, as data
+#
+# A walker builder turns (cfg, params, calib) into streams + a flat list
+# of LayerSteps (+ StreamSwitch fences) + a finalizer. Builders must not
+# read stream VALUES while building (closures only bake static context:
+# specs, positions, the params they quantize) — stream-dependent work
+# (e.g. the encoder final norm feeding cross-attention) happens inside a
+# StreamSwitch at its place in the walk, which is what lets the overlap
+# scheduler look one step ahead safely.
+# ---------------------------------------------------------------------------
+
+def _walker_decoder_only(cfg: Config, params: Dict, calib) -> LayerWalker:
+    mc = cfg.model
+    dtype = jnp.dtype(mc.dtype)
+    hs = []
+    for b in calib:
+        h = embed(params["embed"], b["tokens"], dtype)
+        if b.get("embeds") is not None:
+            h = jnp.concatenate([b["embeds"].astype(dtype), h], axis=1)
+        hs.append(h)
+    seqs = [h.shape[1] for h in hs]
+    assert len(set(seqs)) == 1, "calibration batches must share seq_len"
+    b0, s0, _ = hs[0].shape
+    positions = jnp.arange(s0, dtype=jnp.int32)[None, :].repeat(b0, 0)
+
+    items: List[qstream.WalkItem] = []
+    collected: List[List[Dict]] = []    # per segment: per-element subtrees
+    li = 0
+    for seg, seg_params in zip(T.segments(mc), params["blocks"]):
+        elems: List[Dict] = [dict() for _ in range(seg.count)]
+        collected.append(elems)
+        for c in range(seg.count):
+            for s_i, spec in enumerate(seg.specs):
+
+                def apply_fn(p, h, bi, _spec=spec):
+                    out, _ = T.layer_forward(mc, _spec, p, h, positions)
+                    return out
+
+                li += 1
+                items.append(LayerStep(
+                    name=f"layer {li}",
+                    # lazy slice: materialized at the step's turn, released
+                    # after it — the walk never pins all pre-quant slices
+                    params=(lambda _sp=seg_params, _c=c, _k=f"sub{s_i}":
+                            T._seg_take(_sp, _c)[_k]),
+                    apply_fn=apply_fn,
+                    hs_slot="h", fwd_key=("dec", str(spec)),
+                    store=(lambda p, _e=elems[c], _k=f"sub{s_i}":
+                           _e.__setitem__(_k, p))))
+
+    def finalize() -> Dict:
+        out = dict(params)
+        out["blocks"] = [T._stack_trees(elems) for elems in collected]
+        return out
+
+    return LayerWalker(streams={"h": hs}, items=items, finalize=finalize)
+
+
+def _walker_encdec(cfg: Config, params: Dict, calib) -> LayerWalker:
+    mc = cfg.model
+    dtype = jnp.dtype(mc.dtype)
+    # ----- encoder stream -----
+    hs = []
+    for b in calib:
+        fr = b["frames"].astype(dtype)
+        hs.append(fr + sinusoidal_positions(fr.shape[1], mc.d_model
+                                            )[None].astype(dtype))
+    se = hs[0].shape[1]
+    b0 = hs[0].shape[0]
+    enc_pos = jnp.arange(se, dtype=jnp.int32)[None, :].repeat(b0, 0)
+
+    items: List[qstream.WalkItem] = []
+    n_enc = jax.tree_util.tree_leaves(
+        params["encoder"]["layers"])[0].shape[0]
+    enc_elems: List[Optional[Dict]] = [None] * n_enc
+    for i in range(n_enc):
+
+        def enc_apply(p, h, bi):
+            hn = norm(mc, p["norm1"], h)
+            from repro.models import attention as attn
+            y = attn.attention_forward(mc, p["mixer"], hn, enc_pos,
+                                       causal=False, use_rope=False,
+                                       name="mixer")
+            h = h + y
+            hn = norm(mc, p["norm2"], h)
+            from repro.models.layers import mlp as mlp_fn
+            return h + mlp_fn(mc, p["mlp"], hn, name="mlp")
+
+        items.append(LayerStep(
+            name=f"enc {i + 1}",
+            params=(lambda _i=i: T._seg_take(params["encoder"]["layers"],
+                                             _i)),
+            apply_fn=enc_apply, hs_slot="enc", fwd_key=("enc",),
+            store=(lambda p, _i=i: enc_elems.__setitem__(_i, p))))
+
+    # ----- enc → dec fence: finalize the (quantized) encoder stream into
+    # the cross-attention memory, open the decoder stream -----
+    dhs = []
+    for b in calib:
+        tk = b["tokens"]
+        h = embed(params["embed"], tk, dtype)
+        dhs.append(h + sinusoidal_positions(tk.shape[1], mc.d_model
+                                            )[None].astype(dtype))
+    sd = dhs[0].shape[1]
+    dec_pos = jnp.arange(sd, dtype=jnp.int32)[None, :].repeat(b0, 0)
+    ctx: Dict[str, List[jax.Array]] = {}
+
+    def switch(streams: Dict[str, List[jax.Array]]) -> None:
+        ctx["enc_out"] = [norm(mc, params["encoder"]["final_norm"], h)
+                          for h in streams["enc"]]
+        streams["dec"] = dhs
+
+    items.append(StreamSwitch(name="enc→dec", run=switch))
+
+    n_dec = jax.tree_util.tree_leaves(
+        params["decoder"]["layers"])[0].shape[0]
+    dec_elems: List[Optional[Dict]] = [None] * n_dec
+    for i in range(n_dec):
+
+        def dec_apply(p, h, bi):
+            from repro.models import attention as attn
+            from repro.models.layers import mlp as mlp_fn
+            llp = p["layer"]
+            hn = norm(mc, llp["norm1"], h)
+            y = attn.attention_forward(mc, llp["mixer"], hn, dec_pos,
+                                       causal=True, use_rope=False,
+                                       name="layer.mixer")
+            h = h + y
+            hn = norm(mc, p["xnorm"], h)
+            kv = attn.cross_attention_kv(mc, p["xattn"], ctx["enc_out"][bi],
+                                         "xattn")
+            h = h + attn.cross_attention(mc, p["xattn"], hn, kv, "xattn")
+            hn = norm(mc, llp["norm2"], h)
+            return h + mlp_fn(mc, llp["mlp"], hn, name="layer.mlp")
+
+        # enc_out[bi] is baked into the trace → key per batch index
+        items.append(LayerStep(
+            name=f"dec {i + 1}",
+            params=(lambda _i=i: T._seg_take(params["decoder"]["layers"],
+                                             _i)),
+            apply_fn=dec_apply, hs_slot="dec", fwd_key=("xdec",),
+            batch_dependent=True,
+            store=(lambda p, _i=i: dec_elems.__setitem__(_i, p))))
+
+    def finalize() -> Dict:
+        out = dict(params)
+        out["encoder"] = {"layers": T._stack_trees(enc_elems),
+                          "final_norm": params["encoder"]["final_norm"]}
+        out["decoder"] = {"layers": T._stack_trees(dec_elems),
+                          "final_norm": params["decoder"]["final_norm"]}
+        return out
+
+    return LayerWalker(streams={"enc": hs}, items=items, finalize=finalize)
 
 
 _MESH_FROM_CONFIG = object()     # sentinel: resolve the quant.mesh knob
@@ -324,151 +616,31 @@ def quantize_model(cfg: Config, params: Dict,
     unset, the ``quant.mesh`` knob is resolved through
     :func:`repro.launch.mesh.make_quant_mesh` (default "off" = single
     device).
+
+    The walk runs under ``quant.pipeline`` (serial | overlap — see
+    :mod:`repro.core.stream`); artifacts are schedule-independent.
     """
+    global _LAST_FWD_STATS
     t_start = time.perf_counter()
     report = QuantReport()
     if mesh is _MESH_FROM_CONFIG:
         from repro.launch.mesh import make_quant_mesh
         mesh = make_quant_mesh(cfg.quant.mesh)
 
-    fwd_cache: Dict = {}     # per-run compiled-forward cache (jit_capture)
-    if cfg.model.is_encoder_decoder:
-        out = _quantize_encdec(cfg, params, calib, report, verbose,
-                               fwd_cache, mesh)
-    else:
-        out = _quantize_decoder_only(cfg, params, calib, report, verbose,
-                                     fwd_cache, mesh)
+    fwd_cache = ForwardCache()   # per-run compiled-forward cache (jit_capture)
+    build = (_walker_encdec if cfg.model.is_encoder_decoder
+             else _walker_decoder_only)
+    walker = build(cfg, params, calib)
+    try:
+        out = qstream.run_walker(cfg, walker, report, fwd_cache=fwd_cache,
+                                 mesh=mesh, verbose=verbose)
+    finally:
+        # only the counters outlive the run — keeping the cache itself
+        # alive would pin every compiled forward and its baked closure
+        # constants (positions, enc_out) past the model they belong to
+        _LAST_FWD_STATS = fwd_cache.stats()
     report.seconds_total = time.perf_counter() - t_start
     return out, report
-
-
-def _quantize_decoder_only(cfg: Config, params: Dict, calib, report,
-                           verbose: bool, fwd_cache: Dict,
-                           mesh=None) -> Dict:
-    mc = cfg.model
-    dtype = jnp.dtype(mc.dtype)
-    hs = []
-    for b in calib:
-        h = embed(params["embed"], b["tokens"], dtype)
-        if b.get("embeds") is not None:
-            h = jnp.concatenate([b["embeds"].astype(dtype), h], axis=1)
-        hs.append(h)
-    seqs = [h.shape[1] for h in hs]
-    assert len(set(seqs)) == 1, "calibration batches must share seq_len"
-    b0, s0, _ = hs[0].shape
-    positions = jnp.arange(s0, dtype=jnp.int32)[None, :].repeat(b0, 0)
-
-    new_blocks = []
-    specs_per_seg = T.segments(mc)
-    li = 0
-    for seg, seg_params in zip(specs_per_seg, params["blocks"]):
-        elems = []
-        for c in range(seg.count):
-            elem = T._seg_take(seg_params, c)
-            new_elem = {}
-            for s_i, spec in enumerate(seg.specs):
-                lp = elem[f"sub{s_i}"]
-
-                def apply_fn(p, h, bi, _spec=spec):
-                    out, _ = T.layer_forward(mc, _spec, p, h, positions)
-                    return out
-
-                lp_new, hs = quantize_layer(cfg, lp, hs, apply_fn, report,
-                                            fwd_cache=fwd_cache,
-                                            fwd_key=("dec", str(spec)),
-                                            mesh=mesh)
-                new_elem[f"sub{s_i}"] = lp_new
-                li += 1
-                if verbose:
-                    print(f"  layer {li}: {report.summary()}")
-            elems.append(new_elem)
-        new_blocks.append(T._stack_trees(elems))
-    out = dict(params)
-    out["blocks"] = new_blocks
-    return out
-
-
-def _quantize_encdec(cfg: Config, params: Dict, calib, report,
-                     verbose: bool, fwd_cache: Dict, mesh=None) -> Dict:
-    mc = cfg.model
-    dtype = jnp.dtype(mc.dtype)
-    # ----- encoder -----
-    hs = []
-    for b in calib:
-        fr = b["frames"].astype(dtype)
-        hs.append(fr + sinusoidal_positions(fr.shape[1], mc.d_model
-                                            )[None].astype(dtype))
-    se = hs[0].shape[1]
-    b0 = hs[0].shape[0]
-    enc_pos = jnp.arange(se, dtype=jnp.int32)[None, :].repeat(b0, 0)
-
-    n_enc = jax.tree_util.tree_leaves(
-        params["encoder"]["layers"])[0].shape[0]
-    enc_elems = []
-    for i in range(n_enc):
-        lp = T._seg_take(params["encoder"]["layers"], i)
-
-        def enc_apply(p, h, bi):
-            hn = norm(mc, p["norm1"], h)
-            from repro.models import attention as attn
-            y = attn.attention_forward(mc, p["mixer"], hn, enc_pos,
-                                       causal=False, use_rope=False,
-                                       name="mixer")
-            h = h + y
-            hn = norm(mc, p["norm2"], h)
-            from repro.models.layers import mlp as mlp_fn
-            return h + mlp_fn(mc, p["mlp"], hn, name="mlp")
-
-        lp_new, hs = quantize_layer(cfg, lp, hs, enc_apply, report,
-                                    fwd_cache=fwd_cache, fwd_key=("enc",),
-                                    mesh=mesh)
-        enc_elems.append(lp_new)
-    enc_out = [norm(mc, params["encoder"]["final_norm"], h) for h in hs]
-
-    # ----- decoder -----
-    dhs = []
-    for b in calib:
-        tk = b["tokens"]
-        h = embed(params["embed"], tk, dtype)
-        dhs.append(h + sinusoidal_positions(tk.shape[1], mc.d_model
-                                            )[None].astype(dtype))
-    sd = dhs[0].shape[1]
-    dec_pos = jnp.arange(sd, dtype=jnp.int32)[None, :].repeat(b0, 0)
-
-    n_dec = jax.tree_util.tree_leaves(
-        params["decoder"]["layers"])[0].shape[0]
-    dec_elems = []
-    for i in range(n_dec):
-        lp = T._seg_take(params["decoder"]["layers"], i)
-
-        def dec_apply(p, h, bi):
-            from repro.models import attention as attn
-            from repro.models.layers import mlp as mlp_fn
-            llp = p["layer"]
-            hn = norm(mc, llp["norm1"], h)
-            y = attn.attention_forward(mc, llp["mixer"], hn, dec_pos,
-                                       causal=True, use_rope=False,
-                                       name="layer.mixer")
-            h = h + y
-            hn = norm(mc, p["xnorm"], h)
-            kv = attn.cross_attention_kv(mc, p["xattn"], enc_out[bi],
-                                         "xattn")
-            h = h + attn.cross_attention(mc, p["xattn"], hn, kv, "xattn")
-            hn = norm(mc, llp["norm2"], h)
-            return h + mlp_fn(mc, llp["mlp"], hn, name="layer.mlp")
-
-        # enc_out[bi] is baked into the trace → key per batch index
-        lp_new, dhs = quantize_layer(cfg, lp, dhs, dec_apply, report,
-                                     fwd_cache=fwd_cache, fwd_key=("xdec",),
-                                     batch_dependent=True, mesh=mesh)
-        dec_elems.append(lp_new)
-
-    out = dict(params)
-    out["encoder"] = {"layers": T._stack_trees(enc_elems),
-                      "final_norm": params["encoder"]["final_norm"]}
-    out["decoder"] = {"layers": T._stack_trees(dec_elems),
-                      "final_norm": params["decoder"]["final_norm"]}
-    return out
 
 
 # ---------------------------------------------------------------------------

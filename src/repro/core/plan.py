@@ -88,6 +88,13 @@ class QuantReport:
     seconds_stage1: float = 0.0
     seconds_stage2: float = 0.0
     peak_resident_bytes: int = 0     # analytic single-instance residency
+    # stream-scheduler telemetry (core/stream.py): wall seconds per
+    # layer-step (the overlap schedule's only sync point is the step's
+    # report boundary, so this is its per-layer measurement; under serial
+    # seconds_stage1/2 stay the synchronized per-stage split) and the
+    # {mode, steps, spec_captures, repairs, serial_fallbacks} counters.
+    layer_step_seconds: List[float] = dataclasses.field(default_factory=list)
+    pipeline_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         n = len(self.linears)
@@ -349,8 +356,10 @@ def _make_stage2(qc: QuantConfig, impl: str,
 
 def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
                            report: QuantReport, rpiq_enabled: bool,
-                           gshard: Optional[QuantGroupSharding] = None
-                           ) -> List[MemberResult]:
+                           gshard: Optional[QuantGroupSharding] = None,
+                           sync: bool = True,
+                           deferred: Optional[List[Callable[[], None]]]
+                           = None) -> List[MemberResult]:
     """One stacked dispatch per stage for the whole group.
 
     Members concatenate on the lane axis — a stacked member (e.g. E MoE
@@ -365,6 +374,16 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
     variants; the outputs come back sharded and are gathered to the
     default device before scatter (see the comment below — the propagate
     forward must stay single-device).
+
+    ``sync=False`` (the overlap schedule) skips the per-stage
+    ``block_until_ready`` so stage dispatches stay async — the stage
+    seconds then measure dispatch, and the scheduler takes wall-clock per
+    layer-step at its report boundary instead. With ``deferred`` the
+    per-linear report records (whose ``np.asarray`` calls would
+    synchronize on the executor outputs) are packaged as a closure
+    appended to the list, to be materialized at that same boundary —
+    record ORDER is preserved, so reports match the serial schedule
+    exactly.
     """
     ms = group.members
     t0 = time.perf_counter()
@@ -383,7 +402,8 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
         ("stage1", group.key, qc.gptq_impl, with_rtn, shard_key),
         lambda: _make_stage1(qc, qc.gptq_impl, with_rtn, gshard))
     hd, res1, rtn = stage1(w, st.H, jnp.float32(qc.percdamp))
-    jax.block_until_ready(res1.w_q)
+    if sync:
+        jax.block_until_ready(res1.w_q)
     t1 = time.perf_counter()
     report.seconds_stage1 += t1 - t0
 
@@ -406,7 +426,8 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
             lambda: _make_stage2(qc, qc.rpiq_impl, gshard))
         res2 = stage2(res1.w_q, w, x, hd, res1.scales, res1.zeros,
                       h_count=st.count, x_count=xc)
-        jax.block_until_ready(res2.w_q)
+        if sync:
+            jax.block_until_ready(res2.w_q)
         t2 = time.perf_counter()
         report.seconds_stage2 += t2 - t1
 
@@ -431,28 +452,41 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
                                   for a in (w_final, scales, zeros))
 
     seconds = (time.perf_counter() - t0) / max(1, int((~starved).sum()))
-    err1 = np.asarray(res1.err)
-    hist = np.asarray(res2.loss_history) if res2 is not None else None
-    ploss = np.asarray(res2.proj_loss) if res2 is not None else None
-    iters = np.asarray(res2.iters_run) if res2 is not None else None
+
+    def _record():
+        # np.asarray synchronizes on the executor outputs — under the
+        # overlap schedule this runs deferred, at the step's report
+        # boundary, so the dispatch queue has already been refilled.
+        err1 = np.asarray(res1.err)
+        hist = np.asarray(res2.loss_history) if res2 is not None else None
+        ploss = np.asarray(res2.proj_loss) if res2 is not None else None
+        iters = np.asarray(res2.iters_run) if res2 is not None else None
+        off = 0
+        for m in ms:
+            shape = m.wshape
+            for li, lname in enumerate(m.lane_names):
+                i = off + li
+                if starved[i]:
+                    report.linears.append(LinearRecord(
+                        lname, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+                elif do_rpiq:
+                    report.linears.append(LinearRecord(
+                        lname, shape, float(err1[i]), _gamma_list(hist[i]),
+                        float(ploss[i]), int(iters[i]), "rpiq", seconds))
+                else:
+                    report.linears.append(LinearRecord(
+                        lname, shape, float(err1[i]), [], 0.0, 0, "gptq",
+                        seconds))
+            off += m.lanes
+
+    if deferred is None:
+        _record()
+    else:
+        deferred.append(_record)
 
     results = []
     off = 0
     for m in ms:
-        shape = m.wshape
-        for li, lname in enumerate(m.lane_names):
-            i = off + li
-            if starved[i]:
-                report.linears.append(LinearRecord(
-                    lname, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
-            elif do_rpiq:
-                report.linears.append(LinearRecord(
-                    lname, shape, float(err1[i]), _gamma_list(hist[i]),
-                    float(ploss[i]), int(iters[i]), "rpiq", seconds))
-            else:
-                report.linears.append(LinearRecord(
-                    lname, shape, float(err1[i]), [], 0.0, 0, "gptq",
-                    seconds))
         sl = slice(off, off + m.lanes)
         if m.stacked:
             results.append(MemberResult(m.name, w_final[sl],
@@ -531,7 +565,8 @@ def _execute_member_singleton(qc: QuantConfig, m: PlanMember,
     return MemberResult(m.name, res2.w_q, grid)
 
 
-def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport
+def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport,
+                      deferred: Optional[List[Callable[[], None]]] = None
                       ) -> MemberResult:
     """Blocksize/grid-unaligned member: RTN for starved lanes, else skip.
 
@@ -539,8 +574,18 @@ def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport
     aligns to ``group_size`` (only GPTQ/RPIQ need ``blocksize``
     alignment); otherwise one full-row group, no stored grid. A stacked
     member mixes per-lane outcomes via the mask; its grid is stored only
-    when every lane produced one (all-starved + aligned).
+    when every lane produced one (all-starved + aligned). Fallback
+    records carry no device values, but with ``deferred`` they still
+    queue behind the group closures so report ORDER matches serial.
     """
+    recs: List[LinearRecord] = []
+
+    def _emit():
+        if deferred is None:
+            report.linears.extend(recs)
+        else:
+            deferred.append(lambda: report.linears.extend(recs))
+
     shape = m.wshape
     aligned = shape[1] % qc.group_size == 0
     gsz = qc.group_size if aligned else shape[1]
@@ -550,17 +595,20 @@ def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport
             res = rtn_quantize(jnp.asarray(m.w_oi, jnp.float32),
                                bits=qc.bits, group_size=gsz,
                                symmetric=qc.symmetric)
-            report.linears.append(LinearRecord(
+            recs.append(LinearRecord(
                 m.name, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+            _emit()
             return MemberResult(m.name, res.w_q,
                                 (res.scales, res.zeros) if aligned else None)
-        report.linears.append(LinearRecord(
+        recs.append(LinearRecord(
             m.name, shape, 0.0, [], 0.0, 0, "skipped", 0.0))
+        _emit()
         return MemberResult(m.name, None, None)
     for li, lname in enumerate(m.lane_names):
-        report.linears.append(LinearRecord(
+        recs.append(LinearRecord(
             lname, shape, 0.0, [], 0.0, 0,
             "rtn-fallback" if sv[li] else "skipped", 0.0))
+    _emit()
     if not sv.any():
         return MemberResult(m.name, None, None)
     w = jnp.asarray(m.w_oi, jnp.float32)
@@ -576,7 +624,9 @@ def _execute_fallback(qc: QuantConfig, m: PlanMember, report: QuantReport
 def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
                  rpiq_enabled: bool = True,
                  batched: Optional[bool] = None,
-                 mesh=None) -> Dict[str, MemberResult]:
+                 mesh=None, sync: bool = True,
+                 deferred: Optional[List[Callable[[], None]]] = None
+                 ) -> Dict[str, MemberResult]:
     """Run every group + fallback; returns {member name → MemberResult}.
 
     ``batched=None`` reads ``qc.batched_executor``; ``False`` forces the
@@ -587,6 +637,13 @@ def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
     pass the divisibility guards runs mesh-wide (DESIGN.md §2.6); the rest
     — and the whole plan when ``mesh`` is None or ``batched`` is False —
     keep the single-device paths.
+
+    ``sync=False`` + ``deferred`` is the overlap schedule's contract
+    (core/stream.py): batched stage dispatches stay async and the
+    report-record closures (which synchronize via ``np.asarray``) queue
+    into ``deferred`` for the caller's report boundary. The legacy
+    per-linear path stays per-stage synchronized regardless — it exists
+    as the timing baseline.
     """
     if batched is None:
         batched = qc.batched_executor
@@ -596,13 +653,14 @@ def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
             gshard = quant_group_sharding(
                 mesh, sum(m.lanes for m in group.members), group.key[0])
             results = _execute_group_batched(qc, group, report, rpiq_enabled,
-                                             gshard)
+                                             gshard, sync=sync,
+                                             deferred=deferred)
         else:
             results = [_execute_member_singleton(qc, m, report, rpiq_enabled)
                        for m in group.members]
         for r in results:
             out[r.name] = r
     for m in plan.fallbacks:
-        r = _execute_fallback(qc, m, report)
+        r = _execute_fallback(qc, m, report, deferred=deferred)
         out[r.name] = r
     return out

@@ -1,0 +1,234 @@
+"""Streaming layer-walk scheduler: one walker, two pipelines.
+
+The quantization pipeline used to hold two near-duplicate serial walkers
+(decoder-only and encoder-decoder) that each hand-rolled the same loop:
+capture a layer's Hessians, execute its quant plan, scatter, propagate,
+next layer. This module inverts that control flow. An architecture is
+described once as a :class:`LayerWalker` — a flat list of
+:class:`LayerStep` items (plus :class:`StreamSwitch` fences where the
+residual stream changes, e.g. encoder → decoder) — and
+:func:`run_walker` drains it under one of two schedules
+(``quant.pipeline``):
+
+``serial``
+    The classic alternation, bit-for-bit the pre-walker behaviour:
+    each step captures, executes (per-stage ``block_until_ready`` so the
+    report's stage seconds measure compute), scatters, propagates.
+
+``overlap``
+    A two-deep stage queue built on JAX async dispatch. For step *i*:
+
+    1. capture runs on the post-scatter stream of *i−1* (under overlap
+       this is the **exact Hessian repair** of the speculative pass
+       below — same compiled entries, same accumulation order, so the
+       Hessian state is bitwise the serial one);
+    2. the plan executes with **no per-stage sync** — stage dispatches
+       are enqueued and timing lands at the step's report boundary;
+    3. while the executor is in flight, step *i+1*'s jitted capture
+       forward is dispatched **speculatively on the pre-quantization
+       stream** (the capture-forward outputs of step *i*, which exist
+       before the executor finishes). The speculative pass warms the
+       capture jit entry and keeps the device queue full; its numeric
+       results are discarded by the repair in (1), which is what keeps
+       ``overlap`` bitwise-equal to ``serial``;
+    4. scatter + propagate are enqueued, then the step's deferred
+       executor records materialize and the per-step wall clock is
+       taken (the only synchronization point in overlap mode).
+
+    Speculation is skipped — the scheduler degrades to serial re-capture
+    for that step — when the next step's signature marks the repair
+    unsound (``LayerStep.repair_sound=False``: routed MoE, whose token
+    routing can shift after the scatter and whose per-expert capture
+    does host-side dispatch bookkeeping), when the next item is a
+    :class:`StreamSwitch` fence, when the steps read different stream
+    slots, or when capture runs eagerly (``quant.jit_capture=false``).
+
+Per-run counters land in ``report.pipeline_stats`` and the per-step wall
+clocks in ``report.layer_step_seconds``; parity between the two
+schedules is pinned in ``tests/test_pipeline_stream.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union  # noqa: F401
+
+import jax
+
+from repro.config import Config
+from repro.core import plan as qplan
+from repro.core.plan import QuantReport
+
+PIPELINE_MODES = ("serial", "overlap")
+
+
+@dataclasses.dataclass
+class LayerStep:
+    """One quantizable layer of the walk.
+
+    ``apply_fn(params, h, batch_index) -> h_out`` runs the layer;
+    ``params`` is the layer's param subtree (pre-quantization) — either
+    the dict itself or a zero-arg thunk producing it, so walkers over
+    scan-stacked param trees slice each layer **lazily** at its turn
+    instead of pinning every pre-quant slice for the whole walk (the
+    scheduler also releases it once the step is stored). ``store`` puts
+    the quantized subtree back into the caller's assembly. ``hs_slot``
+    names the residual stream the step consumes and produces;
+    ``fwd_key``/``batch_dependent`` key the jitted capture forward
+    exactly as :func:`repro.core.pipeline._layer_forward_jit` expects.
+    ``repair_sound=False`` marks the capture-ahead Hessian repair
+    unsound for this step (routed MoE) — the overlap scheduler then
+    degrades to serial re-capture for it; ``None`` (default) resolves
+    lazily through ``pipeline._layer_repair_sound`` on the materialized
+    params.
+    """
+    name: str
+    params: Union[Dict, Callable[[], Dict]]
+    apply_fn: Callable
+    hs_slot: str
+    fwd_key: Tuple
+    store: Callable[[Dict], None]
+    batch_dependent: bool = False
+    repair_sound: Optional[bool] = None
+
+    def resolve_params(self) -> Dict:
+        if callable(self.params):
+            self.params = self.params()
+        return self.params
+
+    def release_params(self) -> None:
+        self.params = None
+
+
+@dataclasses.dataclass
+class StreamSwitch:
+    """A fence between stream slots (e.g. encoder → decoder).
+
+    ``run(streams)`` mutates the walker's stream dict — typically
+    finalizing one slot (encoder final norm → cross-attention memory)
+    and initializing the next. Speculation never crosses a switch, so
+    the downstream slot always initializes from fully-propagated
+    (post-quantization) upstream state, exactly as the serial walk does.
+    """
+    name: str
+    run: Callable[[Dict[str, List[jax.Array]]], None]
+
+
+WalkItem = Union[LayerStep, StreamSwitch]
+
+
+def _repair_sound(qpipe, step: LayerStep) -> bool:
+    """Resolve (and cache) a step's repair soundness — looked up through
+    the pipeline module so tests can monkeypatch the predicate."""
+    if step.repair_sound is None:
+        step.repair_sound = qpipe._layer_repair_sound(step.resolve_params())
+    return step.repair_sound
+
+
+@dataclasses.dataclass
+class LayerWalker:
+    """An architecture's layer walk: streams + steps + reassembly.
+
+    ``streams`` maps slot name → per-calibration-batch residual arrays
+    (only the slots live at walk start; switches may add more).
+    ``items`` must be constructible up front (builders bake closures,
+    they do not read stream values — stream-dependent work belongs in a
+    :class:`StreamSwitch`), which is what lets the scheduler look one
+    step ahead. ``finalize()`` reassembles the quantized param tree from
+    what the steps ``store``d.
+    """
+    streams: Dict[str, List[jax.Array]]
+    items: Sequence[WalkItem]
+    finalize: Callable[[], Dict]
+
+
+def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
+               fwd_cache: Optional[Dict] = None, mesh=None,
+               verbose: bool = False) -> Dict:
+    """Drain the walker under ``cfg.quant.pipeline``; returns the
+    finalized (quantized) param tree.
+
+    Both schedules dispatch the same computations in the same order on
+    the same inputs — ``overlap`` only moves synchronization points and
+    adds discarded speculative work — so their artifacts (on-grid
+    params, Γ histories, packed tensors) are bitwise-identical.
+    """
+    from repro.core import pipeline as qpipe   # circular-at-import only
+
+    qc = cfg.quant
+    mode = qc.pipeline
+    if mode not in PIPELINE_MODES:
+        raise ValueError(
+            f"quant.pipeline must be one of {PIPELINE_MODES}, got {mode!r}")
+    overlap = mode == "overlap"
+    use_spec = overlap and qc.jit_capture and fwd_cache is not None
+    stats = {"mode": mode, "steps": 0, "spec_captures": 0, "repairs": 0,
+             "serial_fallbacks": 0}
+    items: List[WalkItem] = list(walker.items)
+    spec_for: Optional[LayerStep] = None   # step the in-flight speculative
+    #                                        capture targeted
+    for idx, item in enumerate(items):
+        if isinstance(item, StreamSwitch):
+            item.run(walker.streams)
+            spec_for = None
+            continue
+        t_step = time.perf_counter()
+        hs = walker.streams[item.hs_slot]
+        # speculation eligibility is knowable up front (it only depends on
+        # the NEXT item's signature/slot), so the pre-quant outputs are
+        # retained exactly when the capture-ahead below will consume them.
+        # The repair-soundness predicate resolves lazily and only under
+        # overlap (short-circuit), materializing nxt's params at most one
+        # step early — they are about to be needed anyway.
+        nxt = items[idx + 1] if idx + 1 < len(items) else None
+        can_spec = (use_spec and isinstance(nxt, LayerStep)
+                    and nxt.hs_slot == item.hs_slot
+                    and _repair_sound(qpipe, nxt))
+        # 1. capture — under overlap this re-propagates the taps on the
+        # repaired (post-scatter) stream: the exact Hessian repair of the
+        # speculative pass, riding its compiled entries.
+        cap = qpipe.capture_layer(cfg, item, hs, fwd_cache,
+                                  collect_h_out=can_spec)
+        if spec_for is item:
+            stats["repairs"] += 1
+        spec_for = None
+        # 2. plan
+        new_params, dense_names, plan = qpipe.plan_layer(cfg, item, cap, hs)
+        # 3. execute — async under overlap: per-stage sync and record
+        # materialization defer to this step's report boundary below.
+        deferred: Optional[List[Callable[[], None]]] = \
+            [] if overlap else None
+        results = qplan.execute_plan(qc, plan, report, mesh=mesh,
+                                     sync=not overlap, deferred=deferred)
+        # 4. scatter on-grid weights (+ grids) back into the subtree
+        qpipe.scatter_layer(new_params, dense_names, cap, results)
+        # 5. capture-ahead: dispatch the NEXT step's capture forward on
+        # THIS step's pre-quantization outputs while the executor is in
+        # flight. Discarded at the repair in (1) — overlap stays exact.
+        if use_spec and isinstance(nxt, LayerStep):
+            if can_spec:
+                qpipe.capture_layer(cfg, nxt, cap.h_out, fwd_cache,
+                                    speculative=True)
+                spec_for = nxt
+                stats["spec_captures"] += 1
+            else:
+                stats["serial_fallbacks"] += 1
+        # 6. propagate quantized activations
+        walker.streams[item.hs_slot] = qpipe.propagate_layer(
+            cfg, item, new_params, hs, fwd_cache)
+        item.store(new_params)
+        # 7. report boundary: materialize the deferred executor records
+        # and take the per-layer-step wall clock — the only sync in
+        # overlap mode (speculative work stays in flight across it).
+        item.release_params()    # drop the pre-quant slice progressively
+        if deferred:
+            for fin in deferred:
+                fin()
+        if overlap:
+            jax.block_until_ready(walker.streams[item.hs_slot][-1])
+        report.layer_step_seconds.append(time.perf_counter() - t_step)
+        stats["steps"] += 1
+        if verbose:
+            print(f"  {item.name}: {report.summary()}")
+    report.pipeline_stats = dict(stats)
+    return walker.finalize()

@@ -12,6 +12,12 @@ packed int4 params + report.
 sharded group execution: every quant-plan group that divides the mesh runs
 lane-sharded over ``data`` and row-tiled over ``model`` (DESIGN.md §2.6,
 docs/QUANTIZATION.md). Default "off" = single device.
+
+``quant.pipeline=overlap`` switches the layer walk to the streaming
+scheduler (core/stream.py, DESIGN.md §2.7): executor dispatches stay
+async and the next layer's capture forward runs speculatively on the
+pre-quantization stream with exact Hessian repair after the scatter.
+Artifacts are bitwise-identical to the default ``serial`` schedule.
 """
 from __future__ import annotations
 
@@ -68,6 +74,9 @@ def main(argv=None):
     if mesh is not None:
         print(f"[quantize] sharded group execution on mesh "
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    if qc.pipeline != "serial":
+        print(f"[quantize] streaming layer walk: quant.pipeline="
+              f"{qc.pipeline}")
     params_q, report = quantize_model(cfg, params, calib, verbose=True,
                                       mesh=mesh)
     print(f"[quantize] {report.summary()}")
