@@ -29,7 +29,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (table1_lm_quality, table2_vlm_overfit,
                             table3_memory, table4_time, table5_convergence,
-                            roofline)
+                            roofline, serving_bench)
     suites = {
         "table1": lambda: table1_lm_quality.run(steps=steps),
         "table2": lambda: table2_vlm_overfit.run(steps=max(40, steps // 2)),
@@ -38,6 +38,7 @@ def main(argv=None) -> None:
         "table5": lambda: table5_convergence.run(steps=max(40, steps // 2),
                                                  tiny=tiny),
         "roofline": roofline.run,
+        "serving": lambda: serving_bench.run(tiny=tiny),
     }
     wanted = argv or list(suites)
     os.makedirs("artifacts/bench", exist_ok=True)
@@ -56,6 +57,10 @@ def main(argv=None) -> None:
             with open("BENCH_table4.json", "w") as f:
                 json.dump(flat, f, indent=1)
             print(f"  wrote BENCH_table4.json ({len(flat)} impl rows)")
+        if name == "serving" and not tiny:
+            with open("BENCH_serving.json", "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"  wrote BENCH_serving.json ({len(rows)} rows)")
         for r in rows:
             print("  " + ",".join(f"{k}={v}" for k, v in r.items()
                                   if k != "bench"))

@@ -1,0 +1,274 @@
+"""Serving benchmark: static vs continuous batching, fp16 vs int4 weights.
+
+One synthetic Poisson trace per config (mixed prompt lengths, mixed
+max_new), replayed against both engines:
+
+- **static**: FCFS groups of ``serve.max_batch`` requests through
+  ``engine.generate`` — prompts right-padded to the group max, every lane
+  decodes to the group's slowest ``max_new``, results delivered at batch
+  completion (that is the static engine's contract, and exactly the cost
+  model continuous batching removes).
+- **continuous**: the same trace through ``scheduler.ContinuousEngine``
+  (chunked prefill interleaved with decode, lanes reused on finish).
+
+The clock is virtual: ``t`` advances by the measured wall of each engine
+call, and request ``i`` becomes visible once ``arrival_i <= t`` — so the
+numbers are architecture-honest on any host without needing real threads.
+Warmup calls (excluded from the clock) pre-compile every jitted shape.
+The arrival rate is calibrated per (config, weights): the trace is first
+replayed back-to-back through the continuous engine to measure its
+saturated service time, and Poisson arrivals are then drawn at 1.3× that
+service rate — sustained saturation, where lane occupancy and admission
+latency under backlog are what distinguish the schedulers.
+
+Metrics per row: tokens/s over engine-busy time, TTFT mean/p50/p95/p99
+(arrival → first token available), TPOT p50/p95/p99 (per-token time after
+the first; batch-amortized for static), and batch-occupancy (fraction of
+decode-lane-steps doing useful work). Schema + regeneration contract:
+docs/BENCHMARKS.md; full (non ``--tiny``) runs rewrite BENCH_serving.json
+at the repo root.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_config
+from repro.core.pipeline import pack_for_serving
+from repro.models import transformer as T
+from repro.serving.engine import generate
+from repro.serving.scheduler import ContinuousEngine
+
+
+def _make_requests(cfg, n: int, rng: np.random.Generator, tiny: bool):
+    """Mixed-length prompts + mixed decode budgets (eos never fires, so
+    lengths are exact and occupancy math is deterministic)."""
+    mc = cfg.model
+    plens = (4, 6) if tiny else (6, 10, 14, 18)
+    # wide max_new spread: output length is the high-variance axis of real
+    # traffic, and it is exactly what static batching pads away (every
+    # lane decodes to the group max)
+    mnews = (2, 4, 8) if tiny else (2, 4, 8, 16, 24)
+    reqs = []
+    for _ in range(n):
+        s0 = int(rng.choice(plens))
+        toks = rng.integers(1, mc.vocab_size, size=(1, s0)).astype(np.int32)
+        b = {"tokens": jnp.asarray(toks)}
+        if mc.is_encoder_decoder:
+            b["frames"] = jnp.asarray(rng.standard_normal(
+                (1, mc.encoder_seq_len, mc.d_model)).astype(np.float32))
+        reqs.append({"batch": b, "max_new": int(rng.choice(mnews))})
+    return reqs
+
+
+def _arrivals(reqs, rate: float, rng: np.random.Generator) -> np.ndarray:
+    gaps = rng.exponential(1.0 / rate, size=len(reqs))
+    return np.cumsum(gaps) - gaps[0]          # first request arrives at t=0
+
+
+def _pct(xs: List[float]) -> Dict[str, float]:
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99))}
+
+
+def _pad_group(reqs) -> Dict[str, jnp.ndarray]:
+    """Right-pad prompts to the group max — the static-batch tax."""
+    smax = max(r["batch"]["tokens"].shape[1] for r in reqs)
+    toks = np.zeros((len(reqs), smax), np.int32)
+    for i, r in enumerate(reqs):
+        t = np.asarray(r["batch"]["tokens"][0])
+        toks[i, :t.shape[0]] = t
+    out = {"tokens": jnp.asarray(toks)}
+    if "frames" in reqs[0]["batch"]:
+        out["frames"] = jnp.concatenate([r["batch"]["frames"] for r in reqs])
+    return out
+
+
+def _jit_generate(cfg, mnt: int):
+    """Fully-jitted static generate — the A/B isolates *scheduling*, so the
+    static engine gets compiled execution too (its eager per-call tracing
+    overhead is not what continuous batching fixes)."""
+    def fn(params, batch):
+        return generate(cfg, params, batch, max_new_tokens=mnt)
+    return jax.jit(fn)
+
+
+def _run_static(cfg, params, reqs, arrivals) -> Dict[str, float]:
+    lanes = cfg.serve.max_batch
+    groups = [list(range(i, min(i + lanes, len(reqs))))
+              for i in range(0, len(reqs), lanes)]
+    gen = {}
+    for g in groups:      # warmup: compile each (B, S_max, mnt_max) shape
+        batch = _pad_group([reqs[i] for i in g])
+        mnt = max(reqs[i]["max_new"] for i in g)
+        gen.setdefault(mnt, _jit_generate(cfg, mnt))
+        jax.block_until_ready(gen[mnt](params, batch).tokens)
+    t = 0.0
+    busy = 0.0
+    ttft, tpot = [], []
+    tokens_total = 0
+    lane_steps_useful = lane_steps_total = 0
+    for g in groups:
+        batch = _pad_group([reqs[i] for i in g])
+        mnt = max(reqs[i]["max_new"] for i in g)
+        t = max(t, float(arrivals[g[-1]]))      # batch forms on last arrival
+        t0 = time.perf_counter()
+        res = gen[mnt](params, batch)
+        jax.block_until_ready(res.tokens)
+        dt = time.perf_counter() - t0
+        busy += dt
+        t += dt
+        for i in g:
+            steps = reqs[i]["max_new"]
+            tokens_total += steps
+            ttft.append(t - float(arrivals[i]))   # delivered at completion
+            tpot.append(dt / mnt)                 # batch-amortized
+            lane_steps_useful += steps
+        lane_steps_total += len(g) * mnt
+    return {"tokens_total": tokens_total, "busy_s": busy,
+            "ttft": ttft, "tpot": tpot,
+            "occupancy": lane_steps_useful / lane_steps_total}
+
+
+def _run_continuous(cfg, params, reqs, arrivals, max_len: int
+                    ) -> Dict[str, float]:
+    eng = ContinuousEngine(cfg, params, max_len=max_len)
+    # warmup: one request per distinct prompt length compiles every jitted
+    # shape on the trace (prefill begin/step/finish, decode, insert, evict)
+    seen = set()
+    for r in reqs:
+        s0 = r["batch"]["tokens"].shape[1]
+        if s0 not in seen:
+            seen.add(s0)
+            eng.submit(r["batch"], max_new_tokens=2)
+    eng.run()
+    t = 0.0
+    busy = 0.0
+    next_req = 0
+    first_t: Dict[int, float] = {}
+    last_t: Dict[int, float] = {}
+    rid_of: Dict[int, int] = {}
+    steps_of: Dict[int, int] = {}
+    lane_steps = decode_ticks = 0
+    n = len(reqs)
+    finished = 0
+    while finished < n:
+        while next_req < n and arrivals[next_req] <= t:
+            rid = eng.submit(reqs[next_req]["batch"],
+                             max_new_tokens=reqs[next_req]["max_new"])
+            rid_of[rid] = next_req
+            next_req += 1
+        if eng.idle and next_req < n:
+            t = float(arrivals[next_req])       # idle: jump to next arrival
+            continue
+        t0 = time.perf_counter()
+        rep = eng.step()
+        dt = time.perf_counter() - t0
+        busy += dt
+        t += dt
+        # decode participation this tick, from the report: every lane
+        # active at the decode step emits exactly one token unless it hit
+        # eos (eos never fires on bench traces) — pre-tick `active` would
+        # undercount lanes the deficit-driven prefill inserted mid-tick
+        if rep.decoded:
+            decode_ticks += 1
+            lane_steps += len(rep.decoded)
+        for rid, _ in rep.first_tokens:
+            if rid in rid_of:
+                first_t[rid] = last_t[rid] = t
+        for rid, _ in rep.decoded:
+            if rid in rid_of:
+                last_t[rid] = t
+        for f in rep.finished:
+            if f.rid in rid_of:
+                steps_of[f.rid] = f.steps
+                finished += 1
+    ttft = [first_t[r] - float(arrivals[rid_of[r]]) for r in first_t]
+    tpot = [(last_t[r] - first_t[r]) / (steps_of[r] - 1)
+            for r in first_t if steps_of.get(r, 0) > 1]
+    return {"tokens_total": int(sum(steps_of.values())), "busy_s": busy,
+            "ttft": ttft, "tpot": tpot,
+            "occupancy": lane_steps / max(1, decode_ticks * eng.lanes)}
+
+
+def run(tiny: bool = False) -> List[Dict]:
+    # full runs scale the proxy models up (d256+) so decode-step compute
+    # dominates per-tick host overhead and the A/B measures *scheduling*;
+    # --tiny keeps the smoke dims — it checks the path runs, not perf
+    sizes = {"opt-proxy": {} if tiny else dict(
+                 num_layers=6, d_model=256, num_heads=8, num_kv_heads=8,
+                 d_ff=1024),
+             "whisper-large-v3": dict(
+                 num_layers=4, d_model=256, num_heads=8, num_kv_heads=8,
+                 d_ff=1024, encoder_layers=2)}
+    archs = ["opt-proxy"] if tiny else ["opt-proxy", "whisper-large-v3"]
+    n = 8 if tiny else 32
+    load_factor = 1.3
+    rows: List[Dict] = []
+    for arch in archs:
+        cfg = bench_config(arch, **sizes[arch])
+        cfg.serve.max_batch = 2 if tiny else 4
+        cfg.serve.prefill_chunk = 4 if tiny else 8
+        rng = np.random.default_rng(0)
+        reqs = _make_requests(cfg, n, rng, tiny)
+        max_len = max(r["batch"]["tokens"].shape[1] + r["max_new"]
+                      for r in reqs) + 2
+        key = jax.random.PRNGKey(0)
+        params = (T.init_encdec_params(cfg.model, key)
+                  if cfg.model.is_encoder_decoder
+                  else T.init_params(cfg.model, key))
+        weight_sets = {"fp16": params,
+                       "int4": pack_for_serving(cfg, params)}
+        for wname, wparams in weight_sets.items():
+            # calibrate per weight set: replay the trace back-to-back
+            # (all arrivals at t=0) through the continuous engine to
+            # measure its saturated service time, then draw Poisson
+            # arrivals at `load_factor`× that service rate — sustained
+            # saturation, the regime a loaded deployment runs in: lanes
+            # stay contended, so occupancy measures how full each
+            # scheduler keeps them and TTFT measures admission latency
+            # under backlog. Both schedulers replay the *same* trace.
+            ccfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+                cfg.serve, scheduler="continuous"))
+            sat = _run_continuous(ccfg, wparams, reqs,
+                                  np.zeros(n, np.float64), max_len)
+            rate = n * load_factor / sat["busy_s"]
+            arrivals = _arrivals(reqs, rate, np.random.default_rng(1))
+            for sched in ("static", "continuous"):
+                # each engine runs in its natural configuration: static
+                # prefills single-shot, continuous prefills in chunks
+                scfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+                    cfg.serve, scheduler=sched,
+                    prefill_chunk=0 if sched == "static"
+                    else cfg.serve.prefill_chunk))
+                if sched == "static":
+                    m = _run_static(scfg, wparams, reqs, arrivals)
+                else:
+                    m = _run_continuous(scfg, wparams, reqs, arrivals,
+                                        max_len)
+                tt, tp = _pct(m["ttft"]), _pct(m["tpot"])
+                rows.append({
+                    "config": arch, "weights": wname, "scheduler": sched,
+                    "n_requests": n, "lanes": cfg.serve.max_batch,
+                    "prefill_chunk": scfg.serve.prefill_chunk,
+                    "tokens_total": m["tokens_total"],
+                    "tokens_per_s": round(m["tokens_total"] / m["busy_s"],
+                                          2),
+                    "ttft_mean_s": round(float(np.mean(m["ttft"])), 4),
+                    "ttft_p50_s": round(tt["p50"], 4),
+                    "ttft_p95_s": round(tt["p95"], 4),
+                    "ttft_p99_s": round(tt["p99"], 4),
+                    "tpot_p50_s": round(tp["p50"], 5),
+                    "tpot_p95_s": round(tp["p95"], 5),
+                    "tpot_p99_s": round(tp["p99"], 5),
+                    "occupancy": round(m["occupancy"], 4),
+                    "busy_s": round(m["busy_s"], 3),
+                })
+    return rows

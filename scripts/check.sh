@@ -44,3 +44,13 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table5 --ti
 # tests/test_pipeline_stream.py; this guards the bench/launch plumbing)
 REPRO_BENCH_PIPELINE=overlap \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table4 --tiny
+
+# serving smoke: static-vs-continuous A/B bench path end to end
+# (scheduler parity is pinned in tests/test_serving.py; --tiny does NOT
+# rewrite the repo-root BENCH_serving.json), plus the launcher on the
+# quantized continuous decode hot path (RTN-packed int4 weights through
+# the slotted-cache scheduler — the deployment entry point)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run serving --tiny
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m repro.launch.serve --arch opt-proxy --smoke --pack-rtn \
+  --batch 2 --prompt-len 8 serve.max_new_tokens=4 serve.scheduler=continuous

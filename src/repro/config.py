@@ -176,7 +176,6 @@ class QuantConfig:
     calib_batch_size: int = 16
     calib_seq_len: int = 512
     act_order: bool = False
-    kernel_impl: str = "xla"        # xla | pallas (serving matmul backend)
     gptq_impl: str = "auto"         # auto | pallas | xla: stage-1 sweep
     #                                 backend (kernels/ops.py gptq_block —
     #                                 fused Pallas lazy-block kernel vs the
@@ -250,11 +249,31 @@ class TrainConfig:
 
 @dataclass
 class ServeConfig:
-    max_batch: int = 8
+    max_batch: int = 8              # decode lanes (continuous) / batch (static)
     max_new_tokens: int = 32
     temperature: float = 0.0        # 0 = greedy
     quantized: bool = True          # serve int4-packed weights
-    prefill_chunk: int = 0          # 0 = single-shot prefill
+    prefill_chunk: int = 0          # 0 = single-shot prefill; >0 = prefill in
+    #                                 chunks of this many positions (bounds
+    #                                 per-tick prefill work so decode steps
+    #                                 interleave — docs/SERVING.md). Chunked
+    #                                 and single-shot prefill are
+    #                                 logits/cache-equivalent (pinned in
+    #                                 tests/test_serving.py)
+    scheduler: str = "static"       # batching engine (docs/SERVING.md):
+    #                                 "static" = engine.generate (whole batch
+    #                                 padded to the slowest lane); "continuous"
+    #                                 = serving/scheduler.ContinuousEngine —
+    #                                 slot-based admit/evict mid-flight,
+    #                                 chunked prefill interleaved with decode
+    w4a16_impl: str = "auto"        # auto | pallas | xla: quantized-decode
+    #                                 matmul backend for every QuantizedTensor
+    #                                 dense on the serve path (kernels/ops.
+    #                                 w4a16_matmul — same pattern and parity
+    #                                 discipline as gptq_impl/rpiq_impl;
+    #                                 "auto" = pallas on TPU, XLA ref
+    #                                 elsewhere). Installed as the ops-level
+    #                                 default around every engine trace
 
 
 @dataclass

@@ -15,6 +15,7 @@ multiples and slice back, so kernels keep hard divisibility asserts.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -60,10 +61,35 @@ def hessian_accum(x: jax.Array, *, impl: str = "auto") -> jax.Array:
 # y = x @ dequant(W)^T      (W packed int4, grouped scales/zeros)
 # ---------------------------------------------------------------------------
 
+# The serving engines install cfg.serve.w4a16_impl here (a trace-time
+# default, read when impl is not passed explicitly): every QuantizedTensor
+# dense on the decode path flows through models/linear.dense, which cannot
+# thread an impl argument without widening every model signature. Callers
+# that jit must key their compiled entries on the impl they installed —
+# serving/engine.py and serving/scheduler.py build their jitted steps per
+# engine instance with the knob fixed at construction (docs/SERVING.md).
+_W4A16_DEFAULT_IMPL = "auto"
+
+
+@contextlib.contextmanager
+def w4a16_default_impl(impl: str):
+    """Scoped override of the w4a16_matmul default backend (trace-time)."""
+    global _W4A16_DEFAULT_IMPL
+    assert impl in ("auto", "pallas", "xla"), impl
+    prev = _W4A16_DEFAULT_IMPL
+    _W4A16_DEFAULT_IMPL = impl
+    try:
+        yield
+    finally:
+        _W4A16_DEFAULT_IMPL = prev
+
+
 def w4a16_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
                  zeros: jax.Array, *, group_size: int = 128,
-                 impl: str = "auto") -> jax.Array:
+                 impl: str | None = None) -> jax.Array:
     """x: (..., k); packed: (n, k//2) u8; scales/zeros: (n, k//group_size)."""
+    if impl is None:
+        impl = _W4A16_DEFAULT_IMPL
     if impl == "xla" or (impl == "auto" and not _on_tpu()):
         lead = x.shape[:-1]
         y = ref.w4a16_matmul_ref(x.reshape(-1, x.shape[-1]), packed,
@@ -533,6 +559,6 @@ def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
     return y.astype(u.dtype), h_last.astype(h0.dtype)
 
 
-__all__ = ["hessian_accum", "w4a16_matmul", "quant_pack", "gptq_block",
-           "gptq_block_sharded", "rpiq_block", "rpiq_block_sharded",
-           "selective_scan"]
+__all__ = ["hessian_accum", "w4a16_matmul", "w4a16_default_impl",
+           "quant_pack", "gptq_block", "gptq_block_sharded", "rpiq_block",
+           "rpiq_block_sharded", "selective_scan"]

@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-proxy --smoke \
         --prompt-len 32 --batch 4 serve.max_new_tokens=16
+
+``serve.scheduler=continuous`` routes the same prompts through the
+continuous-batching engine (serving/scheduler.py) instead of the static
+batch; ``--pack-rtn`` RTN-packs the (init or loaded) weights to int4 so
+the quantized decode hot path runs without a quantize-pipeline artifact.
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ from repro.configs.registry import get_config
 from repro.data import MarkovLM
 from repro.models import transformer as T
 from repro.serving.engine import generate
+from repro.serving.scheduler import ContinuousEngine
 
 
 def main(argv=None):
@@ -25,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--params", default=None,
                     help="pickled packed params from launch.quantize")
+    ap.add_argument("--pack-rtn", action="store_true",
+                    help="RTN-pack weights to int4 QuantizedTensor before "
+                         "serving (no quantize run needed)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("overrides", nargs="*")
@@ -42,6 +51,11 @@ def main(argv=None):
     else:
         params = (T.init_encdec_params(mc, key) if mc.is_encoder_decoder
                   else T.init_params(mc, key))
+    if args.pack_rtn:
+        from repro.core.pipeline import pack_for_serving
+        params = pack_for_serving(cfg, params)
+        print(f"[serve] RTN-packed weights to int4 "
+              f"(w4a16_impl={cfg.serve.w4a16_impl})")
 
     data = MarkovLM(mc.vocab_size, seed=3)
     batch = data.batch(args.batch, args.prompt_len)
@@ -54,13 +68,26 @@ def main(argv=None):
             jnp.float32)
 
     t0 = time.perf_counter()
-    res = generate(cfg, params, batch)
+    if cfg.serve.scheduler == "continuous":
+        n_front = batch["embeds"].shape[1] if "embeds" in batch else 0
+        cap = args.prompt_len + n_front + cfg.serve.max_new_tokens + 1
+        eng = ContinuousEngine(cfg, params, max_len=cap)
+        rids = []
+        for i in range(args.batch):
+            one = {k: v[i:i + 1] for k, v in batch.items()}
+            rids.append(eng.submit(one))
+        done = eng.run()
+        seqs = [done[r].tokens for r in rids]
+        toks = int(sum(len(s) for s in seqs))
+    else:
+        res = generate(cfg, params, batch)
+        seqs = [res.tokens[i] for i in range(args.batch)]
+        toks = int(res.tokens.size)
     dt = time.perf_counter() - t0
-    toks = int(res.tokens.size)
-    print(f"[serve] generated {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
+    print(f"[serve] scheduler={cfg.serve.scheduler}: {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
     for i in range(min(args.batch, 4)):
-        print(f"  seq{i}: {list(map(int, res.tokens[i]))}")
+        print(f"  seq{i}: {list(map(int, seqs[i]))}")
 
 
 if __name__ == "__main__":

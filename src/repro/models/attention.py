@@ -163,23 +163,50 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def attention_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
                       positions: jax.Array, cache: Dict, *,
-                      window: int = 0, name: str = "attn"
+                      window: int = 0, name: str = "attn",
+                      start: Optional[int] = None
                       ) -> Tuple[jax.Array, Dict]:
     """Prefill: run causal attention AND populate the cache.
 
     Full-attn cache: written at [0:S]. Window cache (ring, size W): the last
     W tokens land at slot ``pos % W``.
+
+    ``start`` switches to *continuation* mode (chunked prefill,
+    docs/SERVING.md): ``x`` is the chunk of absolute positions
+    ``[start, start+S)``, the cache already holds positions ``< start``, and
+    queries attend to cached history + the chunk (read-before-write, so a
+    ring cache still covers every in-chunk query's window). ``start=None``
+    keeps the legacy whole-sequence path bit-for-bit untouched.
     """
     q, k, v = _project_qkv(cfg, p, x, name)
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     n_rep = cfg.num_heads // cfg.num_kv_heads
-    o = _attend_chunked(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
-                        positions, positions, causal=True, window=window,
-                        softcap=cfg.attn_logits_softcap,
-                        opt=cfg.opt_attention)
-    b, s, _, _ = o.shape
+    b, s = x.shape[:2]
+    if start is None:
+        o = _attend_chunked(q, repeat_kv(k, n_rep), repeat_kv(v, n_rep),
+                            positions, positions, causal=True, window=window,
+                            softcap=cfg.attn_logits_softcap,
+                            opt=cfg.opt_attention)
+    else:
+        # continuation: history keys come from the cache as written by the
+        # PREVIOUS chunks (read before this chunk's write — a ring cache
+        # then still holds (start-1-W, start-1], which together with the
+        # in-chunk keys covers every query's window)
+        w_cache = cache["k"].shape[1]
+        old_kpos = _cache_key_positions(start - 1, w_cache, window)
+        old_kpos = jnp.broadcast_to(old_kpos[None], (b, w_cache))
+        k_hist = cache["k"].astype(k.dtype)
+        v_hist = cache["v"].astype(v.dtype)
+        k_all = jnp.concatenate([repeat_kv(k_hist, n_rep),
+                                 repeat_kv(k, n_rep)], axis=1)
+        v_all = jnp.concatenate([repeat_kv(v_hist, n_rep),
+                                 repeat_kv(v, n_rep)], axis=1)
+        kv_pos = jnp.concatenate([old_kpos, positions], axis=1)
+        o = _attend_chunked(q, k_all, v_all, positions, kv_pos, causal=True,
+                            window=window, softcap=cfg.attn_logits_softcap,
+                            opt=cfg.opt_attention)
     y = dense(p["o"], o.reshape(b, s, -1), f"{name}.o")
 
     w_cache = cache["k"].shape[1]
@@ -191,12 +218,43 @@ def attention_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
         bidx = jnp.arange(b)[:, None]
         cache = {"k": cache["k"].at[bidx, idx].set(ksel),
                  "v": cache["v"].at[bidx, idx].set(vsel)}
+    elif window > 0 and start is not None:
+        # ring continuation: the chunk may straddle the wrap point, so the
+        # slot-indexed scatter replaces the offset dynamic_update_slice
+        idx = positions % w_cache                                # (B, S)
+        bidx = jnp.arange(b)[:, None]
+        cache = {"k": cache["k"].at[bidx, idx].set(
+                     k.astype(cache["k"].dtype)),
+                 "v": cache["v"].at[bidx, idx].set(
+                     v.astype(cache["v"].dtype))}
     else:
+        off = 0 if start is None else start
         cache = {"k": jax.lax.dynamic_update_slice(
-                     cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                     cache["k"], k.astype(cache["k"].dtype), (0, off, 0, 0)),
                  "v": jax.lax.dynamic_update_slice(
-                     cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))}
+                     cache["v"], v.astype(cache["v"].dtype), (0, off, 0, 0))}
     return y, cache
+
+
+def _cache_key_positions(last: int, cache_len: int, window: int) -> jax.Array:
+    """Absolute position held by each cache slot after ``last`` was written.
+
+    Full cache (window=0): slot i holds position i, valid while i <= last.
+    Ring cache: slot i holds the largest p <= last with p % W == i, valid
+    only within the window (unwritten slots alias future positions and are
+    masked exactly like the warm-up handling in :func:`attention_decode`).
+    Returns (cache_len,) int32 with -1 marking invalid slots; ``last=-1``
+    (empty cache) marks everything invalid.
+    """
+    if last < 0:
+        return jnp.full((cache_len,), -1, jnp.int32)
+    idx = jnp.arange(cache_len, dtype=jnp.int32)
+    if window > 0:
+        off = (last - idx) % cache_len
+        kpos = last - off
+        lo = last - min(window, cache_len)
+        return jnp.where(kpos > lo, kpos, -1)
+    return jnp.where(idx <= last, idx, -1)
 
 
 def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
@@ -377,16 +435,32 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def mla_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
                 positions: jax.Array, cache: Dict,
-                name: str = "attn") -> Tuple[jax.Array, Dict]:
+                name: str = "attn", start: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict]:
+    """``start`` = chunked-prefill continuation, as in attention_prefill:
+    queries attend cached latents (positions < start) + the chunk."""
     q_nope, q_rope, ckv, k_rope = _mla_qkv(cfg, p, x, positions, name)
-    y = _mla_attend(cfg, p, q_nope, q_rope, ckv, k_rope, positions,
-                    positions, name)
-    s = x.shape[1]
+    if start is None:
+        y = _mla_attend(cfg, p, q_nope, q_rope, ckv, k_rope, positions,
+                        positions, name)
+    else:
+        b = x.shape[0]
+        s_max = cache["ckv"].shape[1]
+        old_kpos = _cache_key_positions(start - 1, s_max, 0)
+        old_kpos = jnp.broadcast_to(old_kpos[None], (b, s_max))
+        ckv_all = jnp.concatenate([cache["ckv"].astype(x.dtype), ckv],
+                                  axis=1)
+        krope_all = jnp.concatenate([cache["krope"].astype(x.dtype), k_rope],
+                                    axis=1)
+        kv_pos = jnp.concatenate([old_kpos, positions], axis=1)
+        y = _mla_attend(cfg, p, q_nope, q_rope, ckv_all, krope_all,
+                        positions, kv_pos, name)
+    off = 0 if start is None else start
     cache = {"ckv": jax.lax.dynamic_update_slice(
-                 cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+                 cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, off, 0)),
              "krope": jax.lax.dynamic_update_slice(
                  cache["krope"], k_rope.astype(cache["krope"].dtype),
-                 (0, 0, 0))}
+                 (0, off, 0))}
     return y, cache
 
 

@@ -186,18 +186,20 @@ def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
 
 
 def layer_prefill(cfg: ModelConfig, spec: LayerSpec, p: Dict, h: jax.Array,
-                  positions: jax.Array, cache: Any, name: str = ""
-                  ) -> Tuple[jax.Array, Any]:
+                  positions: jax.Array, cache: Any, name: str = "",
+                  start: Optional[int] = None) -> Tuple[jax.Array, Any]:
+    """``start`` marks a chunked-prefill continuation (attention variants
+    attend cache + chunk; recurrent states continue naturally)."""
     mixer, mlp_kind = spec
     hn = norm(cfg, p["norm1"], h)
     if mixer == "mla":
         y, cache = attn.mla_prefill(cfg, p["mixer"], hn, positions, cache,
-                                    name=f"{name}mixer")
+                                    name=f"{name}mixer", start=start)
     elif mixer in ("attn", "swa", "local"):
         y, cache = attn.attention_prefill(cfg, p["mixer"], hn, positions,
                                           cache,
                                           window=_window_of(cfg, mixer),
-                                          name=f"{name}mixer")
+                                          name=f"{name}mixer", start=start)
     elif mixer == "rglru":
         y, cache = rec.rglru_block(cfg, p["mixer"], hn, cache,
                                    name=f"{name}mixer")
@@ -315,7 +317,8 @@ def blocks_forward(cfg: ModelConfig, blocks: List[Dict], h: jax.Array,
 
 def blocks_prefill(cfg: ModelConfig, blocks: List[Dict], h: jax.Array,
                    positions: jax.Array, caches: List[Any],
-                   unroll_eager: bool = False
+                   unroll_eager: bool = False,
+                   start: Optional[int] = None
                    ) -> Tuple[jax.Array, List[Any]]:
     segs = segments(cfg)
     new_caches = []
@@ -325,7 +328,8 @@ def blocks_prefill(cfg: ModelConfig, blocks: List[Dict], h: jax.Array,
             out_cache = {}
             for s_i, spec in enumerate(_specs):
                 h, c = layer_prefill(cfg, spec, elem_params[f"sub{s_i}"], h,
-                                     positions, elem_cache[f"sub{s_i}"])
+                                     positions, elem_cache[f"sub{s_i}"],
+                                     start=start)
                 out_cache[f"sub{s_i}"] = c
             h = shard_hint(h, "act")
             return h, out_cache
@@ -478,6 +482,93 @@ def decode_step(cfg: ModelConfig, params: Dict, token: jax.Array,
     return logits, caches
 
 
+def prefill_begin(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                  max_len: int, embeds: Optional[jax.Array] = None,
+                  cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, List[Any]]:
+    """Incremental-prefill setup: embedded inputs + empty caches.
+
+    The caller feeds slices of the returned ``h`` through
+    :func:`prefill_step` one chunk at a time (the continuous-batching
+    scheduler does this to interleave prefill with decode ticks)."""
+    h = _embed_inputs(cfg, params, tokens, embeds)
+    return h, init_block_caches(cfg, h.shape[0], max_len, cache_dtype)
+
+
+def prefill_step(cfg: ModelConfig, params: Dict, h_chunk: jax.Array,
+                 start: int, caches: List[Any],
+                 unroll_eager: bool = False
+                 ) -> Tuple[jax.Array, List[Any]]:
+    """Run one prefill chunk occupying positions [start, start+C)."""
+    b, c, _ = h_chunk.shape
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :].repeat(b, 0)
+    return blocks_prefill(cfg, params["blocks"], h_chunk, positions, caches,
+                          unroll_eager=unroll_eager, start=start)
+
+
+def prefill_finish(cfg: ModelConfig, params: Dict, h_last: jax.Array
+                   ) -> jax.Array:
+    """Next-token logits (B, V) from the final chunk's block output."""
+    h = norm(cfg, params["final_norm"], h_last[:, -1:])
+    return unembed(cfg, params, h)[:, 0]
+
+
+def prefill_chunked(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                    max_len: int, chunk: int,
+                    embeds: Optional[jax.Array] = None,
+                    cache_dtype=jnp.bfloat16, unroll_eager: bool = False
+                    ) -> Tuple[jax.Array, List[Any]]:
+    """Chunked prefill: positions ``[c, c+chunk)`` at a time, each chunk
+    attending cached history + itself (``blocks_prefill(start=...)``).
+    Logits/caches are equivalent to single-shot :func:`prefill` (pinned in
+    tests/test_serving.py); recurrent states thread through naturally.
+    """
+    assert chunk > 0
+    h, caches = prefill_begin(cfg, params, tokens, max_len, embeds,
+                              cache_dtype)
+    s = h.shape[1]
+    hc = h[:, :0]
+    for c0 in range(0, s, chunk):
+        hc, caches = prefill_step(cfg, params, h[:, c0:min(s, c0 + chunk)],
+                                  c0, caches, unroll_eager=unroll_eager)
+    return prefill_finish(cfg, params, hc), caches
+
+
+# ---------------------------------------------------------------------------
+# Slotted-cache API (continuous-batching serving — docs/SERVING.md)
+# ---------------------------------------------------------------------------
+
+def cache_slots_like(caches: Any, lanes: int) -> Any:
+    """A zeroed slotted decode cache with ``lanes`` lanes, shaped like a
+    (batch-1) prefill cache. Every cache leaf in this codebase is stacked
+    ``(layers, batch, ...)``, so the lane axis is axis 1 uniformly (GQA /
+    ring / MLA / recurrent / enc-dec self+cross)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((a.shape[0], lanes) + a.shape[2:], a.dtype),
+        caches)
+
+
+def cache_slot_insert(caches: Any, src: Any, lane: jax.Array) -> Any:
+    """Write a batch-1 cache ``src`` into lane ``lane`` of a slotted cache.
+
+    ``lane`` may be traced (one compiled entry serves every lane). The whole
+    lane is overwritten, which is what makes eviction reuse sound: any slots
+    a previous occupant wrote are replaced by the new sequence's prefix (and
+    positions beyond it are masked by the per-lane ``pos`` at decode time).
+    """
+    lane = jnp.asarray(lane, jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda big, small: big.at[:, lane].set(
+            small[:, 0].astype(big.dtype)), caches, src)
+
+
+def cache_slot_evict(caches: Any, lane: jax.Array) -> Any:
+    """Zero lane ``lane`` (hygiene only — admission overwrites the lane)."""
+    lane = jnp.asarray(lane, jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda a: a.at[:, lane].set(
+            jnp.zeros(a.shape[:1] + a.shape[2:], a.dtype)), caches)
+
+
 # ---------------------------------------------------------------------------
 # Encoder-decoder (whisper)
 # ---------------------------------------------------------------------------
@@ -611,6 +702,95 @@ def encdec_prefill(cfg: ModelConfig, params: Dict, frames: jax.Array,
     h = norm(cfg, params["decoder"]["final_norm"], h[:, -1:])
     logits = unembed(cfg, params, h)[:, 0]
     return logits, cache
+
+
+def encdec_prefill_begin(cfg: ModelConfig, params: Dict, frames: jax.Array,
+                         tokens: jax.Array, max_len: int,
+                         cache_dtype=jnp.bfloat16, unroll_eager: bool = False
+                         ) -> Tuple[jax.Array, Dict]:
+    """Incremental enc-dec prefill setup: one encoder pass, cross-KV cached
+    per layer, empty self-KV caches, decoder inputs embedded + positional."""
+    enc = encode(cfg, params, frames, unroll_eager)
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    h = embed(params["embed"], tokens, dtype)
+    h = h + sinusoidal_positions(s, cfg.d_model)[None].astype(dtype)
+
+    def mk_cache(_, p):
+        kv = attn.cross_attention_kv(cfg, p["xattn"], enc, "xattn")
+        return 0, {"self": attn.init_kv_cache(cfg, b, max_len, cache_dtype),
+                   "cross": jax.tree_util.tree_map(
+                       lambda a: a.astype(cache_dtype), kv)}
+
+    if unroll_eager:
+        n = jax.tree_util.tree_leaves(params["decoder"]["layers"])[0].shape[0]
+        cache = _stack_trees([mk_cache(0, _seg_take(
+            params["decoder"]["layers"], i))[1] for i in range(n)])
+    else:
+        _, cache = jax.lax.scan(mk_cache, 0, params["decoder"]["layers"])
+    return h, cache
+
+
+def encdec_prefill_step(cfg: ModelConfig, params: Dict, h_chunk: jax.Array,
+                        start: int, cache: Dict, unroll_eager: bool = False
+                        ) -> Tuple[jax.Array, Dict]:
+    """One decoder prefill chunk at positions [start, start+C)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, c, _ = h_chunk.shape
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    def one(h, xs):
+        p, cc = xs
+        lp = p["layer"]
+        hn = norm(cfg, lp["norm1"], h)
+        y, self_cache = attn.attention_prefill(
+            cfg, lp["mixer"], hn, positions, cc["self"], name="layer.mixer",
+            start=start)
+        h = h + y
+        hn = norm(cfg, p["xnorm"], h)
+        h = h + attn.cross_attention(cfg, p["xattn"], hn,
+                                     jax.tree_util.tree_map(
+                                         lambda a: a.astype(dtype),
+                                         cc["cross"]), "xattn")
+        hn = norm(cfg, lp["norm2"], h)
+        h = h + mlp(cfg, lp["mlp"], hn, name="layer.mlp")
+        return h, {"self": self_cache, "cross": cc["cross"]}
+
+    if unroll_eager:
+        n = jax.tree_util.tree_leaves(params["decoder"]["layers"])[0].shape[0]
+        ncs, h = [], h_chunk
+        for i in range(n):
+            h, nc = one(h, (_seg_take(params["decoder"]["layers"], i),
+                            _seg_take(cache, i)))
+            ncs.append(nc)
+        return h, _stack_trees(ncs)
+    return jax.lax.scan(one, h_chunk, (params["decoder"]["layers"], cache))
+
+
+def encdec_prefill_finish(cfg: ModelConfig, params: Dict, h_last: jax.Array
+                          ) -> jax.Array:
+    h = norm(cfg, params["decoder"]["final_norm"], h_last[:, -1:])
+    return unembed(cfg, params, h)[:, 0]
+
+
+def encdec_prefill_chunked(cfg: ModelConfig, params: Dict, frames: jax.Array,
+                           tokens: jax.Array, max_len: int, chunk: int,
+                           cache_dtype=jnp.bfloat16,
+                           unroll_eager: bool = False
+                           ) -> Tuple[jax.Array, Dict]:
+    """Chunked-decoder variant of :func:`encdec_prefill`: one encoder pass,
+    cross-KV computed once, then the decoder prompt runs ``chunk`` positions
+    at a time with self-attention continuing from cache (start offsets)."""
+    assert chunk > 0
+    h, cache = encdec_prefill_begin(cfg, params, frames, tokens, max_len,
+                                    cache_dtype, unroll_eager)
+    s = h.shape[1]
+    hc = h[:, :0]
+    for c0 in range(0, s, chunk):
+        hc, cache = encdec_prefill_step(cfg, params,
+                                        h[:, c0:min(s, c0 + chunk)], c0,
+                                        cache, unroll_eager=unroll_eager)
+    return encdec_prefill_finish(cfg, params, hc), cache
 
 
 def encdec_decode_step(cfg: ModelConfig, params: Dict, token: jax.Array,

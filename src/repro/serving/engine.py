@@ -7,11 +7,21 @@ mask (sequences finish independently; finished lanes keep decoding pad
 tokens but their outputs are frozen — the standard static-shape batch
 pattern).
 
+EOS convention: the eos token itself is never emitted. The step that
+samples eos writes token 0 / logprob 0.0 and marks the lane done, so
+``tokens[b, :steps[b]]`` is exactly the usable output and a model that
+legitimately generates token id 0 is not miscounted (``steps`` comes from
+the done mask, not from ``tokens != 0``).
+
 Weights may be full precision or int4-packed (``QuantizedTensor`` leaves,
 produced by core/pipeline.quantize_model) — ``models.linear.dense``
 dispatches per leaf, so the same step function serves both and the dry-run
 can lower the quantized decode path explicitly (the paper's deployment
-claim: §Perf compares both).
+claim: §Perf compares both). The quantized matmul backend is selected by
+``serve.w4a16_impl`` (kernels.ops.w4a16_default_impl trace-time context).
+
+The static-batch loop here is the parity baseline; the continuous-batching
+scheduler lives in serving/scheduler.py (docs/SERVING.md).
 """
 from __future__ import annotations
 
@@ -22,13 +32,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import Config
+from repro.kernels import ops as kops
 from repro.models import transformer as T
 
 
 class GenResult(NamedTuple):
-    tokens: jax.Array       # (B, max_new) generated ids
+    tokens: jax.Array       # (B, max_new) generated ids (0 on done lanes)
     logprobs: jax.Array     # (B, max_new)
-    steps: jax.Array        # (B,) tokens actually produced
+    steps: jax.Array        # (B,) tokens actually produced (pre-eos)
 
 
 def serve_step(cfg: Config, params: Any, token: jax.Array, pos: jax.Array,
@@ -41,12 +52,53 @@ def serve_step(cfg: Config, params: Any, token: jax.Array, pos: jax.Array,
 
 def prefill(cfg: Config, params: Any, batch: Dict[str, jax.Array],
             max_len: int) -> Tuple[jax.Array, Any]:
-    """Prefill from a batch dict ({tokens, embeds?/frames?})."""
+    """Prefill from a batch dict ({tokens, embeds?/frames?}).
+
+    ``serve.prefill_chunk > 0`` runs the prompt through the blocks in
+    chunks of that many positions (bounded per-step work for interleaving
+    with decode); logits/caches match single-shot prefill.
+    """
+    chunk = cfg.serve.prefill_chunk
     if cfg.model.is_encoder_decoder:
+        if chunk > 0:
+            return T.encdec_prefill_chunked(cfg.model, params,
+                                            batch["frames"], batch["tokens"],
+                                            max_len, chunk)
         return T.encdec_prefill(cfg.model, params, batch["frames"],
                                 batch["tokens"], max_len)
+    if chunk > 0:
+        return T.prefill_chunked(cfg.model, params, batch["tokens"], max_len,
+                                 chunk, embeds=batch.get("embeds"))
     return T.prefill(cfg.model, params, batch["tokens"], max_len,
                      embeds=batch.get("embeds"))
+
+
+def prefill_begin(cfg: Config, params: Any, batch: Dict[str, jax.Array],
+                  max_len: int) -> Tuple[jax.Array, Any]:
+    """Incremental prefill setup (continuous batching): returns the full
+    embedded input ``h`` and empty caches; feed ``h`` slices through
+    :func:`prefill_step` one chunk at a time."""
+    if cfg.model.is_encoder_decoder:
+        return T.encdec_prefill_begin(cfg.model, params, batch["frames"],
+                                      batch["tokens"], max_len)
+    return T.prefill_begin(cfg.model, params, batch["tokens"], max_len,
+                           embeds=batch.get("embeds"))
+
+
+def prefill_step(cfg: Config, params: Any, h_chunk: jax.Array, start: int,
+                 caches: Any) -> Tuple[jax.Array, Any]:
+    """One prefill chunk occupying positions [start, start + C)."""
+    if cfg.model.is_encoder_decoder:
+        return T.encdec_prefill_step(cfg.model, params, h_chunk, start,
+                                     caches)
+    return T.prefill_step(cfg.model, params, h_chunk, start, caches)
+
+
+def prefill_finish(cfg: Config, params: Any, h_last: jax.Array) -> jax.Array:
+    """Next-token logits from the final chunk's output."""
+    if cfg.model.is_encoder_decoder:
+        return T.encdec_prefill_finish(cfg.model, params, h_last)
+    return T.prefill_finish(cfg.model, params, h_last)
 
 
 def _sample(key: jax.Array, logits: jax.Array, temperature: float
@@ -61,6 +113,14 @@ def generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,
              temperature: Optional[float] = None,
              seed: int = 0) -> GenResult:
     """Greedy/temperature generation. Static shapes; jit-compiled loop."""
+    with kops.w4a16_default_impl(cfg.serve.w4a16_impl):
+        return _generate(cfg, params, batch, max_new_tokens=max_new_tokens,
+                         eos_id=eos_id, temperature=temperature, seed=seed)
+
+
+def _generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,
+              max_new_tokens: Optional[int], eos_id: int,
+              temperature: Optional[float], seed: int) -> GenResult:
     sc = cfg.serve
     mnt = max_new_tokens or sc.max_new_tokens
     temp = sc.temperature if temperature is None else temperature
@@ -74,24 +134,28 @@ def generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,
         token, pos, caches, done, key = carry
         key, sub = jax.random.split(key)
         lg, caches = serve_step(cfg, params, token, pos, caches)
-        nxt = _sample(sub, lg, temp)
-        lp = jax.nn.log_softmax(lg)[jnp.arange(b), nxt]
-        nxt = jnp.where(done, 0, nxt)
-        newly_done = done | (nxt == eos_id)
-        out = (nxt, jnp.where(done, 0.0, lp))
+        raw = _sample(sub, lg, temp)
+        lp = jax.nn.log_softmax(lg)[jnp.arange(b), raw]
+        newly_done = done | (raw == eos_id)
+        nxt = jnp.where(newly_done, 0, raw)
+        out = (nxt, jnp.where(newly_done, 0.0, lp), ~newly_done)
         return (nxt, pos + 1, caches, newly_done, key), out
 
-    first = _sample(jax.random.PRNGKey(seed), logits, temp)
-    lp0 = jax.nn.log_softmax(logits)[jnp.arange(b), first]
+    first_raw = _sample(jax.random.PRNGKey(seed), logits, temp)
+    done0 = first_raw == eos_id
+    first = jnp.where(done0, 0, first_raw)
+    lp0 = jnp.where(done0, 0.0,
+                    jax.nn.log_softmax(logits)[jnp.arange(b), first_raw])
     pos0 = jnp.full((b,), s0 + n_front, jnp.int32)
-    done0 = first == eos_id
     carry = (first, pos0, caches, done0, jax.random.PRNGKey(seed + 1))
     if mnt > 1:
-        carry, (toks, lps) = jax.lax.scan(body, carry,
-                                          jnp.arange(mnt - 1))
+        carry, (toks, lps, valid) = jax.lax.scan(body, carry,
+                                                 jnp.arange(mnt - 1))
         tokens = jnp.concatenate([first[:, None], toks.T], axis=1)
         logprobs = jnp.concatenate([lp0[:, None], lps.T], axis=1)
+        steps = (~done0).astype(jnp.int32) + \
+            jnp.sum(valid.astype(jnp.int32), axis=0)
     else:
         tokens, logprobs = first[:, None], lp0[:, None]
-    steps = jnp.sum((tokens != 0).astype(jnp.int32), axis=1)
+        steps = (~done0).astype(jnp.int32)
     return GenResult(tokens, logprobs, steps)

@@ -98,6 +98,42 @@ class TestW4A16Kernel:
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=1e-4, atol=1e-3)
 
+    @pytest.mark.parametrize("lead", [(3, 1), (2, 5), (4,)])
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    def test_decode_shapes(self, lead, impl):
+        """The serving decode path calls ops.w4a16_matmul with leading
+        batch dims — (B, 1, k) single-token decode, (B, S, k) prefill.
+        Every impl must match the 2-D ref on the flattened batch ≤1e-5."""
+        from repro.kernels import ops
+        k, n, g = 256, 128, 128
+        x = _rand(lead + (k,), sum(lead), jnp.float32)
+        w = _rand((n, k), 11) * 0.2
+        qt = pack_quantized(w, 4, g)
+        y = ops.w4a16_matmul(x, qt.packed, qt.scales, qt.zeros,
+                             group_size=g, impl=impl)
+        assert y.shape == lead + (n,)
+        y_ref = ref.w4a16_matmul_ref(x.reshape(-1, k), qt.packed, qt.scales,
+                                     qt.zeros, g).reshape(lead + (n,))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_decode_shapes_impls_agree(self):
+        """auto (CPU) == xla == pallas(interpret) bit-for-bit comparable on
+        decode shapes, and the trace-time default-impl context routes the
+        implicit (no-impl-arg) call sites used by models.linear.dense."""
+        from repro.kernels import ops
+        x = _rand((3, 1, 256), 21, jnp.float32)
+        w = _rand((128, 256), 22) * 0.2
+        qt = pack_quantized(w, 4, 128)
+        ys = {}
+        for impl in ("auto", "xla", "pallas"):
+            with ops.w4a16_default_impl(impl):
+                ys[impl] = np.asarray(ops.w4a16_matmul(
+                    x, qt.packed, qt.scales, qt.zeros, group_size=128))
+        np.testing.assert_allclose(ys["auto"], ys["xla"], rtol=0, atol=0)
+        np.testing.assert_allclose(ys["xla"], ys["pallas"],
+                                   rtol=1e-5, atol=1e-5)
+
 
 class TestSelectiveScanKernel:
     def _mk(self, B, S, d, n, seed=0):
