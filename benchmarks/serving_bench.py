@@ -42,7 +42,7 @@ from benchmarks.common import bench_config
 from repro.core.pipeline import pack_for_serving
 from repro.models import transformer as T
 from repro.serving.engine import generate
-from repro.serving.scheduler import ContinuousEngine
+from repro.serving.scheduler import ContinuousEngine, QueueFullError
 
 
 def _make_requests(cfg, n: int, rng: np.random.Generator, tiny: bool):
@@ -139,7 +139,12 @@ def _run_static(cfg, params, reqs, arrivals) -> Dict[str, float]:
 
 def _run_continuous(cfg, params, reqs, arrivals, max_len: int
                     ) -> Dict[str, float]:
-    eng = ContinuousEngine(cfg, params, max_len=max_len)
+    # the engine's deadline machinery runs off the same virtual clock the
+    # replay advances, so request_timeout_s measures virtual (trace) time —
+    # the overload rows shed load exactly as a wall-clock deployment would
+    clockbox = [0.0]
+    eng = ContinuousEngine(cfg, params, max_len=max_len,
+                           clock=lambda: clockbox[0])
     # warmup: one request per distinct prompt length compiles every jitted
     # shape on the trace (prefill begin/step/finish, decode, insert, evict)
     seen = set()
@@ -147,7 +152,7 @@ def _run_continuous(cfg, params, reqs, arrivals, max_len: int
         s0 = r["batch"]["tokens"].shape[1]
         if s0 not in seen:
             seen.add(s0)
-            eng.submit(r["batch"], max_new_tokens=2)
+            eng.submit(r["batch"], max_new_tokens=2, timeout_s=0)
     eng.run()
     t = 0.0
     busy = 0.0
@@ -156,23 +161,29 @@ def _run_continuous(cfg, params, reqs, arrivals, max_len: int
     last_t: Dict[int, float] = {}
     rid_of: Dict[int, int] = {}
     steps_of: Dict[int, int] = {}
+    status_of: Dict[int, str] = {}
     lane_steps = decode_ticks = 0
     n = len(reqs)
-    finished = 0
-    while finished < n:
+    finished = rejected = 0
+    while finished + rejected < n:
         while next_req < n and arrivals[next_req] <= t:
-            rid = eng.submit(reqs[next_req]["batch"],
-                             max_new_tokens=reqs[next_req]["max_new"])
-            rid_of[rid] = next_req
+            try:
+                rid = eng.submit(reqs[next_req]["batch"],
+                                 max_new_tokens=reqs[next_req]["max_new"])
+                rid_of[rid] = next_req
+            except QueueFullError:
+                rejected += 1       # counted in eng.stats["rejections"] too
             next_req += 1
         if eng.idle and next_req < n:
             t = float(arrivals[next_req])       # idle: jump to next arrival
+            clockbox[0] = t
             continue
         t0 = time.perf_counter()
         rep = eng.step()
         dt = time.perf_counter() - t0
         busy += dt
         t += dt
+        clockbox[0] = t
         # decode participation this tick, from the report: every lane
         # active at the decode step emits exactly one token unless it hit
         # eos (eos never fires on bench traces) — pre-tick `active` would
@@ -189,13 +200,16 @@ def _run_continuous(cfg, params, reqs, arrivals, max_len: int
         for f in rep.finished:
             if f.rid in rid_of:
                 steps_of[f.rid] = f.steps
+                status_of[f.rid] = f.status
                 finished += 1
     ttft = [first_t[r] - float(arrivals[rid_of[r]]) for r in first_t]
     tpot = [(last_t[r] - first_t[r]) / (steps_of[r] - 1)
             for r in first_t if steps_of.get(r, 0) > 1]
     return {"tokens_total": int(sum(steps_of.values())), "busy_s": busy,
             "ttft": ttft, "tpot": tpot,
-            "occupancy": lane_steps / max(1, decode_ticks * eng.lanes)}
+            "occupancy": lane_steps / max(1, decode_ticks * eng.lanes),
+            "completed": sum(1 for s in status_of.values() if s == "ok"),
+            "stats": dict(eng.stats)}
 
 
 def run(tiny: bool = False) -> List[Dict]:
@@ -253,22 +267,50 @@ def run(tiny: bool = False) -> List[Dict]:
                 else:
                     m = _run_continuous(scfg, wparams, reqs, arrivals,
                                         max_len)
-                tt, tp = _pct(m["ttft"]), _pct(m["tpot"])
-                rows.append({
-                    "config": arch, "weights": wname, "scheduler": sched,
-                    "n_requests": n, "lanes": cfg.serve.max_batch,
-                    "prefill_chunk": scfg.serve.prefill_chunk,
-                    "tokens_total": m["tokens_total"],
-                    "tokens_per_s": round(m["tokens_total"] / m["busy_s"],
-                                          2),
-                    "ttft_mean_s": round(float(np.mean(m["ttft"])), 4),
-                    "ttft_p50_s": round(tt["p50"], 4),
-                    "ttft_p95_s": round(tt["p95"], 4),
-                    "ttft_p99_s": round(tt["p99"], 4),
-                    "tpot_p50_s": round(tp["p50"], 5),
-                    "tpot_p95_s": round(tp["p95"], 5),
-                    "tpot_p99_s": round(tp["p99"], 5),
-                    "occupancy": round(m["occupancy"], 4),
-                    "busy_s": round(m["busy_s"], 3),
-                })
+                rows.append(_row(arch, wname, sched, "poisson", n, cfg,
+                                 scfg, m))
+            # overload: arrivals at ~3× the saturated service rate against
+            # a finite per-request deadline and a bounded admission queue —
+            # this trace measures load *shedding* (timeout evictions at the
+            # deadline, explicit rejections at the queue bound), not raw
+            # latency: a hardened engine keeps completing work while the
+            # counters account for every dropped request. Continuous engine
+            # only — the static engine has no admission control to measure.
+            per_req = sat["busy_s"] / n
+            ocfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+                cfg.serve, scheduler="continuous",
+                request_timeout_s=per_req * (3 if tiny else 10),
+                max_queue=cfg.serve.max_batch * 2))
+            orate = n * 3.0 / sat["busy_s"]
+            oarr = _arrivals(reqs, orate, np.random.default_rng(2))
+            m = _run_continuous(ocfg, wparams, reqs, oarr, max_len)
+            rows.append(_row(arch, wname, "continuous", "overload", n, cfg,
+                             ocfg, m))
     return rows
+
+
+def _row(arch, wname, sched, trace, n, cfg, scfg, m) -> Dict:
+    tt, tp = _pct(m["ttft"]), _pct(m["tpot"])
+    stats = m.get("stats", {})
+    return {
+        "config": arch, "weights": wname, "scheduler": sched,
+        "trace": trace,
+        "n_requests": n, "lanes": cfg.serve.max_batch,
+        "prefill_chunk": scfg.serve.prefill_chunk,
+        "tokens_total": m["tokens_total"],
+        "tokens_per_s": round(m["tokens_total"] / m["busy_s"], 2),
+        "ttft_mean_s": round(float(np.mean(m["ttft"])), 4),
+        "ttft_p50_s": round(tt["p50"], 4),
+        "ttft_p95_s": round(tt["p95"], 4),
+        "ttft_p99_s": round(tt["p99"], 4),
+        "tpot_p50_s": round(tp["p50"], 5),
+        "tpot_p95_s": round(tp["p95"], 5),
+        "tpot_p99_s": round(tp["p99"], 5),
+        "occupancy": round(m["occupancy"], 4),
+        "busy_s": round(m["busy_s"], 3),
+        # shedding counters: 0 on poisson traces (deadline/queue unarmed);
+        # the static engine has neither, so its row reports n completed
+        "completed": m.get("completed", n),
+        "timeout_evictions": stats.get("timeout_evictions", 0),
+        "rejections": stats.get("rejections", 0),
+    }

@@ -30,6 +30,15 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q -m pallas tests/test_rpiq_kernel.py \
   tests/test_gptq_kernel.py
 
+# robustness leg: the fault-injection suite (guardrail ladder, serving
+# hardening, kill-and-resume parity — registered `faults` marker), plus one
+# kill-and-resume smoke over real process boundaries: launch.quantize is
+# interrupted by an armed fault, resumed from its step checkpoints, and
+# the packed artifacts compared bitwise against a clean run
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q -m faults tests/test_faults.py
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/resume_smoke.py
+
 # benchmark smoke: the quantization hot path must stay runnable end to end —
 # table4 covers the executor/dispatch story, table5 the stage-2 convergence
 # path (Γ trajectories + early stop) on both curvature modes.

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Kill-and-resume smoke over real process boundaries (scripts/check.sh leg).
+
+The in-process resume matrix lives in tests/test_faults.py; this script
+pins the part a test process cannot: a *separate* ``launch.quantize``
+process dies mid-run (armed ``plan.stage1_executor`` fault → nonzero exit),
+a second invocation with ``quant.resume=auto`` picks up its step
+checkpoints, and the final packed artifact is bitwise-identical to a clean
+single-shot run.
+
+    PYTHONPATH=src python scripts/resume_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import shutil
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCH = "opt-proxy"
+COMMON = ["--arch", ARCH, "--smoke"]
+CALIB = ["quant.calib_batches=2", "quant.calib_batch_size=4",
+         "quant.calib_seq_len=32"]
+
+
+def run_quantize(out_dir: str, extra, expect_rc: int) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "repro.launch.quantize",
+           *COMMON, "--out", out_dir, *CALIB, *extra]
+    p = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                       text=True)
+    if p.returncode != expect_rc and not (expect_rc != 0 and p.returncode):
+        print(p.stdout)
+        print(p.stderr, file=sys.stderr)
+        raise SystemExit(
+            f"expected rc={'nonzero' if expect_rc else 0}, "
+            f"got {p.returncode}: {' '.join(cmd)}")
+
+
+def load_leaves(path: str):
+    import jax                      # registers QuantizedTensor pytree nodes
+    import numpy as np
+    import repro                    # noqa: F401
+    import repro.kernels.ops        # noqa: F401
+    with open(path, "rb") as f:
+        tree = pickle.load(f)
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def main() -> None:
+    work = tempfile.mkdtemp(prefix="resume_smoke_")
+    try:
+        ref_dir = os.path.join(work, "ref")
+        res_dir = os.path.join(work, "res")
+        ckpt = os.path.join(work, "ckpt")
+
+        print("[resume_smoke] 1/3 clean reference run")
+        run_quantize(ref_dir, [], expect_rc=0)
+
+        print("[resume_smoke] 2/3 killed run (plan.stage1_executor@4)")
+        run_quantize(res_dir, [
+            f"quant.ckpt_dir={ckpt}", "quant.resume=auto",
+            "faults.arm=plan.stage1_executor@4"], expect_rc=1)
+        if not any(d.startswith("step_") for d in os.listdir(ckpt)):
+            raise SystemExit("killed run left no step checkpoint behind")
+
+        print("[resume_smoke] 3/3 resumed run")
+        run_quantize(res_dir, [
+            f"quant.ckpt_dir={ckpt}", "quant.resume=auto"], expect_rc=0)
+
+        name = next(f for f in os.listdir(ref_dir)
+                    if f.endswith(".params.pkl"))
+        import numpy as np
+        ref = load_leaves(os.path.join(ref_dir, name))
+        res = load_leaves(os.path.join(res_dir, name))
+        if len(ref) != len(res):
+            raise SystemExit(f"leaf count mismatch: {len(ref)} vs {len(res)}")
+        for i, (a, b) in enumerate(zip(ref, res)):
+            if a.dtype != b.dtype or not np.array_equal(
+                    a.view(np.uint8), b.view(np.uint8)):
+                raise SystemExit(f"leaf {i} differs after resume")
+        print(f"[resume_smoke] OK: {len(ref)} leaves bitwise-identical "
+              "after kill+resume")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -207,6 +207,27 @@ class QuantConfig:
     #                                 over data, Cout row tiles over model;
     #                                 non-divisible groups stay unsharded
     #                                 (launch/mesh.make_quant_mesh)
+    resume: str = "off"             # off | auto: with "auto" and a ckpt_dir,
+    #                                 quantize_model restarts a killed walk
+    #                                 from the last completed LayerStep
+    #                                 checkpoint — final artifacts are
+    #                                 bitwise-identical to an uninterrupted
+    #                                 run (tests/test_faults.py)
+    ckpt_dir: str = ""              # "" disables layer checkpointing; set to
+    #                                 a directory to persist completed
+    #                                 LayerStep artifacts + stream state via
+    #                                 distributed/checkpoint.py at every step
+    #                                 boundary (fences always flush)
+    ckpt_keep: int = 2              # retained step checkpoints in ckpt_dir
+    guardrail: bool = True          # numerical guardrail ladder around the
+    #                                 stage-1 Cholesky (core/plan.py): lanes
+    #                                 with non-finite outputs (non-PSD /
+    #                                 NaN Hessian) get escalating damping
+    #                                 retries, then a per-group RTN fallback;
+    #                                 outcomes counted in
+    #                                 QuantReport.guardrail_stats
+    guardrail_retries: int = 2      # damping-escalation rungs before RTN
+    guardrail_damp_factor: float = 10.0  # percdamp multiplier per rung
     pipeline: str = "serial"        # layer-walk scheduling (core/stream.py,
     #                                 DESIGN.md §2.7): "serial" = capture →
     #                                 execute → propagate strictly alternate
@@ -273,7 +294,32 @@ class ServeConfig:
     #                                 discipline as gptq_impl/rpiq_impl;
     #                                 "auto" = pallas on TPU, XLA ref
     #                                 elsewhere). Installed as the ops-level
-    #                                 default around every engine trace
+    #                                 default around every engine trace; on a
+    #                                 kernel fault the continuous engine
+    #                                 degrades pallas→xla at runtime
+    #                                 (docs/SERVING.md §Failure handling)
+    request_timeout_s: float = 0.0  # per-request deadline (0 = none): a
+    #                                 request past its deadline — queued,
+    #                                 prefilling, parked, or decoding — is
+    #                                 evicted with status "timeout" and its
+    #                                 lane refilled the same tick
+    max_queue: int = 0              # bounded admission queue (0 = unbounded):
+    #                                 submits beyond this depth raise
+    #                                 QueueFullError (counted backpressure
+    #                                 instead of unbounded growth)
+    decode_nan_guard: bool = True   # quarantine lanes whose decode logits go
+    #                                 non-finite (evict only the poisoned
+    #                                 lane, keep the batch decoding)
+
+
+@dataclass
+class FaultsConfig:
+    """Deterministic fault-injection plane (core/faults.py)."""
+    arm: str = ""                   # comma-separated "site@trigger[:mode]"
+    #                                 specs, e.g. "plan.stage1_executor@3" or
+    #                                 "hessian.cholesky@1:nonpsd" — grammar
+    #                                 and site table in core/faults.py
+    seed: int = 0                   # seed for probabilistic (@pX) schedules
 
 
 @dataclass
@@ -283,6 +329,7 @@ class Config:
     quant: QuantConfig = field(default_factory=QuantConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     serve: ServeConfig = field(default_factory=ServeConfig)
+    faults: FaultsConfig = field(default_factory=FaultsConfig)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,219 @@
+"""Deterministic fault-injection plane (the robustness backbone).
+
+Production failure modes — a non-PSD Hessian at layer 40, a NaN logit in
+one decode lane, a Mosaic lowering failure — are rare, hardware-flavored
+and unreproducible in CI.  This module makes every one of them a *named
+site* that tests and launchers arm with a *seeded trigger schedule*, so
+each failure path executes deterministically:
+
+======================== ====================================================
+site                     fires at
+======================== ====================================================
+``hessian.cholesky``     stage-1 dispatch of a quant group: corrupts the
+                         stacked Gram matrix (modes: ``nonpsd`` — rescued by
+                         the damping ladder; ``nan`` — forces the RTN rung)
+``plan.stage1_executor`` just before the stage-1 dispatch (kill)
+``plan.stage2_executor`` just before the stage-2 dispatch (kill)
+``stream.capture_forward`` entry of a layer's capture pass (kill)
+``serve.decode_step``    a decode tick: poisons one occupied lane's KV
+                         cache with NaN (the quarantine path detects it)
+``serve.prefill_chunk``  a prefill chunk dispatch (request-level error)
+``kernels.pallas_dispatch`` the pallas branch of ``w4a16_matmul`` at trace
+                         time (drives the runtime pallas→xla degradation)
+======================== ====================================================
+
+Arming grammar (``FaultsConfig.arm`` / :func:`inject`): a comma-separated
+list of ``site@trigger[:mode]`` specs, where ``trigger`` is a 1-based hit
+schedule —
+
+- ``site@3``        fire exactly on the 3rd hit,
+- ``site@3..5``     fire on hits 3 through 5,
+- ``site@3+``       fire on every hit from the 3rd on,
+- ``site@p0.25``    fire each hit with probability 0.25, drawn from a
+  per-site generator seeded by ``(seed, site)`` — the schedule is a pure
+  function of the seed, so every test replay is identical.
+
+``mode`` defaults to ``"kill"``; sites interpret it (``hessian.cholesky``
+takes ``nonpsd``/``nan``).  Sites that are not armed cost one dict lookup.
+
+Hot code calls :func:`fire` (raises :class:`FaultError` when the schedule
+triggers) or :func:`poll` (returns the :class:`FaultSpec` for sites whose
+fault is a corruption rather than an exception).  Tests use the
+:func:`inject` context manager; launchers call
+:func:`install_from_config` (``faults.arm=...`` overrides).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import zlib
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+FAULT_SITES = (
+    "hessian.cholesky",
+    "plan.stage1_executor",
+    "plan.stage2_executor",
+    "stream.capture_forward",
+    "serve.decode_step",
+    "serve.prefill_chunk",
+    "kernels.pallas_dispatch",
+)
+
+
+class FaultError(RuntimeError):
+    """An injected kill-type fault (carries the site for dispatchers that
+    must tell an injected kernel fault from an injected request fault)."""
+
+    def __init__(self, site: str, mode: str, hit: int):
+        super().__init__(f"injected fault at {site!r} "
+                         f"(mode={mode}, hit {hit})")
+        self.site = site
+        self.mode = mode
+        self.hit = hit
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One armed site: a trigger window + per-hit probability + mode."""
+    site: str
+    mode: str = "kill"
+    first: int = 1          # 1-based first hit the fault may fire at
+    last: int = 1           # last hit (inclusive); -1 = no upper bound
+    prob: float = 1.0       # per-hit fire probability inside the window
+
+
+def parse_spec(text: str) -> FaultSpec:
+    """Parse one ``site@trigger[:mode]`` spec (grammar in the module doc)."""
+    text = text.strip()
+    if "@" not in text:
+        raise ValueError(f"fault spec needs site@trigger, got {text!r}")
+    site, rest = text.split("@", 1)
+    site = site.strip()
+    if site not in FAULT_SITES:
+        raise ValueError(f"unknown fault site {site!r}; "
+                         f"known: {', '.join(FAULT_SITES)}")
+    mode = "kill"
+    if ":" in rest:
+        rest, mode = rest.split(":", 1)
+    rest = rest.strip()
+    if rest.startswith("p"):
+        return FaultSpec(site, mode, first=1, last=-1, prob=float(rest[1:]))
+    if rest.endswith("+"):
+        n = int(rest[:-1])
+        return FaultSpec(site, mode, first=n, last=-1)
+    if ".." in rest:
+        a, b = rest.split("..", 1)
+        return FaultSpec(site, mode, first=int(a), last=int(b))
+    n = int(rest)
+    return FaultSpec(site, mode, first=n, last=n)
+
+
+class FaultPlane:
+    """Armed specs + per-site hit counters + seeded probability streams."""
+
+    def __init__(self):
+        self._specs: Dict[str, FaultSpec] = {}
+        self._seed = 0
+        self._rng: Dict[str, np.random.Generator] = {}
+        self.hits: Dict[str, int] = {}
+        self.fired: Dict[str, int] = {}
+
+    # -- arming ------------------------------------------------------------
+
+    def arm(self, spec, seed: int = 0) -> FaultSpec:
+        if isinstance(spec, str):
+            spec = parse_spec(spec)
+        if spec.site not in FAULT_SITES:
+            raise ValueError(f"unknown fault site {spec.site!r}")
+        self._specs[spec.site] = spec
+        self._seed = seed
+        # schedule is a pure function of (seed, site): replays are identical
+        self._rng[spec.site] = np.random.default_rng(
+            (seed & 0xFFFFFFFF) ^ zlib.crc32(spec.site.encode()))
+        self.hits[spec.site] = 0
+        self.fired[spec.site] = 0
+        return spec
+
+    def arm_string(self, text: str, seed: int = 0) -> None:
+        """Arm a comma-separated spec list (the ``faults.arm`` config knob)."""
+        for part in text.split(","):
+            if part.strip():
+                self.arm(part, seed=seed)
+
+    def disarm(self, site: Optional[str] = None) -> None:
+        if site is None:
+            self._specs.clear()
+            self._rng.clear()
+        else:
+            self._specs.pop(site, None)
+            self._rng.pop(site, None)
+
+    def armed(self, site: str) -> bool:
+        return site in self._specs
+
+    # -- hot-path queries --------------------------------------------------
+
+    def poll(self, site: str) -> Optional[FaultSpec]:
+        """Count a hit; return the spec iff the schedule fires this hit."""
+        spec = self._specs.get(site)
+        if spec is None:
+            return None
+        self.hits[site] = h = self.hits.get(site, 0) + 1
+        if h < spec.first or (spec.last >= 0 and h > spec.last):
+            return None
+        if spec.prob < 1.0 and self._rng[site].random() >= spec.prob:
+            return None
+        self.fired[site] = self.fired.get(site, 0) + 1
+        return spec
+
+    def fire(self, site: str) -> None:
+        """Kill-type site: raise :class:`FaultError` when the schedule fires."""
+        spec = self.poll(site)
+        if spec is not None:
+            raise FaultError(site, spec.mode, self.hits[site])
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        return {"hits": dict(self.hits), "fired": dict(self.fired)}
+
+
+#: the process-wide plane all sites consult
+PLANE = FaultPlane()
+
+
+def fire(site: str) -> None:
+    PLANE.fire(site)
+
+
+def poll(site: str) -> Optional[FaultSpec]:
+    return PLANE.poll(site)
+
+
+def armed(site: str) -> bool:
+    return PLANE.armed(site)
+
+
+@contextlib.contextmanager
+def inject(*specs: str, seed: int = 0) -> Iterator[FaultPlane]:
+    """Arm specs for a ``with`` block; previous arming is restored on exit
+    (including when the injected fault itself propagates out)."""
+    parsed = [parse_spec(s) if isinstance(s, str) else s for s in specs]
+    saved = {p.site: PLANE._specs.get(p.site) for p in parsed}
+    try:
+        for p in parsed:
+            PLANE.arm(p, seed=seed)
+        yield PLANE
+    finally:
+        for site, prev in saved.items():
+            if prev is None:
+                PLANE.disarm(site)
+            else:
+                PLANE.arm(prev, seed=seed)
+
+
+def install_from_config(cfg) -> None:
+    """Arm the plane from ``cfg.faults`` (launch entry points call this)."""
+    fc = getattr(cfg, "faults", None)
+    if fc is not None and fc.arm:
+        PLANE.arm_string(fc.arm, seed=fc.seed)

@@ -16,6 +16,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops as kops
 
@@ -69,10 +70,14 @@ def stack_states(states) -> HessianState:
                    states]))
 
 
-def damped(state: HessianState, percdamp: float) -> jax.Array:
+def damped(state: HessianState, percdamp) -> jax.Array:
     """eq. 10: H̃ = H + percdamp·mean(diag H)·I  (also rescues dead columns).
 
     Works on singleton (in, in) and stacked (B, in, in) states alike.
+    ``percdamp`` may be a scalar or, for a stacked state, a per-lane (B,)
+    array — the guardrail ladder (core/plan.py) escalates damping only on
+    lanes whose Cholesky went non-finite, and every per-lane op here is
+    lane-independent, so untouched lanes stay bitwise-identical.
     """
     H = state.H
     diag = jnp.diagonal(H, axis1=-2, axis2=-1)           # (..., in)
@@ -83,6 +88,32 @@ def damped(state: HessianState, percdamp: float) -> jax.Array:
     eye = jnp.eye(H.shape[-1], dtype=H.dtype)
     H = H + jnp.where(dead, 1.0, 0.0)[..., None, :] * eye
     return H + lam[..., None, None] * eye
+
+
+def corrupt_stacked(H: jax.Array, mode: str, percdamp: float,
+                    lane: int = 0) -> jax.Array:
+    """``hessian.cholesky`` fault-site payload: break one lane of a stacked
+    (B, in, in) Gram matrix so the guardrail ladder's rungs execute
+    deterministically (tests/test_faults.py).
+
+    - ``"nonpsd"``: shift the lane's spectrum by ``-(λmin + 2·lam)·I`` so
+      the base-damped matrix still has a negative eigenvalue (Cholesky →
+      NaN) while one damp-factor escalation turns it positive — exercises
+      the retry rung without reaching RTN.
+    - ``"nan"``: poison the lane outright — no damping rescues it, forcing
+      the per-group RTN rung.
+
+    Only ``lane`` is touched; all other lanes are bitwise-unchanged.
+    """
+    if H.ndim == 2:
+        H = H[None]
+    if mode == "nan":
+        return H.at[lane].set(jnp.nan)
+    Hl = np.asarray(jax.device_get(H[lane]), np.float64)
+    lam = float(np.mean(np.diag(Hl))) * percdamp
+    ev_min = float(np.linalg.eigvalsh(Hl)[0])
+    eye = jnp.eye(H.shape[-1], dtype=H.dtype)
+    return H.at[lane].add(-(ev_min + 2.0 * lam) * eye)
 
 
 def _cholesky_inverse_upper_2d(Hd: jax.Array) -> jax.Array:

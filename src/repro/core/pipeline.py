@@ -62,12 +62,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import Config
+from repro.core import faults
 from repro.core import hessian as hess
 from repro.core import plan as qplan
 from repro.core import stream as qstream
 from repro.core.plan import (LinearRecord, MemberResult,  # noqa: F401
                              PlanMember, QuantReport)
 from repro.core.quant import QuantizedTensor, pack_int4
+from repro.kernels import ops as kops
 from repro.core.stream import LayerStep, LayerWalker, StreamSwitch
 from repro.models import transformer as T
 from repro.models import moe as moe_mod
@@ -316,6 +318,7 @@ def capture_layer(cfg: Config, step: LayerStep, hs: List[jax.Array],
     pre-quantization stream the scheduler speculates on).
     """
     del speculative
+    faults.fire("stream.capture_forward")
     qc = cfg.quant
     layer_params = step.resolve_params()
     use_jit = qc.jit_capture and fwd_cache is not None
@@ -631,6 +634,7 @@ def quantize_model(cfg: Config, params: Dict,
     build = (_walker_encdec if cfg.model.is_encoder_decoder
              else _walker_decoder_only)
     walker = build(cfg, params, calib)
+    fb0 = kops.fallback_stats()
     try:
         out = qstream.run_walker(cfg, walker, report, fwd_cache=fwd_cache,
                                  mesh=mesh, verbose=verbose)
@@ -639,6 +643,12 @@ def quantize_model(cfg: Config, params: Dict,
         # alive would pin every compiled forward and its baked closure
         # constants (positions, enc_out) past the model they belong to
         _LAST_FWD_STATS = fwd_cache.stats()
+    # auto→xla kernel downgrades observed during THIS run (delta against
+    # the process-wide counters): surfaced so a budget-driven fallback is
+    # visible in the report instead of silently changing the backend
+    report.kernel_fallbacks = {
+        k: v - fb0.get(k, 0) for k, v in kops.fallback_stats().items()
+        if v - fb0.get(k, 0)}
     report.seconds_total = time.perf_counter() - t_start
     return out, report
 

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import QuantConfig
+from repro.core import faults
 from repro.core import hessian as hess
 from repro.core.gptq import (GPTQResult, gptq_quantize,
                              gptq_quantize_batched, rtn_quantize,
@@ -77,7 +78,8 @@ class LinearRecord:
     gamma: List[float]               # Γ trajectory (Γ[0] = post-stage-1)
     gamma_final: float
     iters: int
-    mode: str                        # "rpiq" | "gptq" | "rtn-fallback" | "skipped"
+    mode: str                        # "rpiq" | "gptq" | "rtn-fallback" |
+    #                                  "rtn-guardrail" | "skipped"
     seconds: float
 
 
@@ -95,6 +97,12 @@ class QuantReport:
     # {mode, steps, spec_captures, repairs, serial_fallbacks} counters.
     layer_step_seconds: List[float] = dataclasses.field(default_factory=list)
     pipeline_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # robustness telemetry (additive; empty = nothing triggered): guardrail
+    # ladder outcomes per run ({damp_retries, lanes_flagged,
+    # lanes_damp_recovered, lanes_rtn_forced}) and the kernels/ops
+    # auto→xla fallback counters observed during the run
+    guardrail_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
+    kernel_fallbacks: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         n = len(self.linears)
@@ -302,6 +310,30 @@ def _cached_executor(key: Tuple, make: Callable[[], Callable]) -> Callable:
     return fn
 
 
+_GUARDRAIL_KEYS = ("damp_retries", "lanes_flagged", "lanes_damp_recovered",
+                   "lanes_rtn_forced")
+
+
+def _guardrail_stats(report: QuantReport) -> Dict[str, int]:
+    for k in _GUARDRAIL_KEYS:
+        report.guardrail_stats.setdefault(k, 0)
+    return report.guardrail_stats
+
+
+def _finite_lanes(res1: GPTQResult) -> np.ndarray:
+    """(B,) host mask: lane produced fully finite stage-1 outputs.
+
+    One fused reduction per array — any NaN/Inf (a failed Cholesky turns
+    the whole lane NaN) poisons the lane's sum. This is the guardrail
+    ladder's detector, so it synchronizes on stage 1; the transfer is B
+    floats.
+    """
+    tot = (jnp.sum(res1.w_q, axis=(-2, -1)) +
+           jnp.sum(res1.scales, axis=(-2, -1)) +
+           jnp.sum(res1.zeros, axis=(-2, -1)))
+    return np.asarray(jnp.isfinite(tot + res1.err))
+
+
 def _make_stage1(qc: QuantConfig, impl: str, with_rtn: bool,
                  gshard: Optional[QuantGroupSharding] = None) -> Callable:
     bits, group_size = qc.bits, qc.group_size
@@ -394,6 +426,10 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
                            jnp.concatenate([h.count for h in hs_lanes]))
     starved = np.concatenate([m.starved_mask() for m in ms])
     with_rtn = bool(starved.any())
+    fspec = faults.poll("hessian.cholesky")
+    if fspec is not None:
+        st = hess.HessianState(
+            hess.corrupt_stacked(st.H, fspec.mode, qc.percdamp), st.count)
     shard_key = None if gshard is None else gshard.cache_key()
     if gshard is not None:
         w = jax.device_put(w, gshard.sharding("w"))
@@ -401,7 +437,50 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
     stage1 = _cached_executor(
         ("stage1", group.key, qc.gptq_impl, with_rtn, shard_key),
         lambda: _make_stage1(qc, qc.gptq_impl, with_rtn, gshard))
-    hd, res1, rtn = stage1(w, st.H, jnp.float32(qc.percdamp))
+    faults.fire("plan.stage1_executor")
+    lanes_total = int(w.shape[0])
+    damp = jnp.full((lanes_total,), qc.percdamp, jnp.float32)
+    hd, res1, rtn = stage1(w, st.H, damp)
+    guarded = np.zeros(lanes_total, bool)
+    if qc.guardrail:
+        bad0 = bad = ~_finite_lanes(res1)
+        rung = 0
+        while bad.any() and rung < qc.guardrail_retries:
+            # guardrail ladder rung: escalate damping only on lanes whose
+            # stage-1 output went non-finite (non-PSD / NaN Hessian).
+            # Every stage-1 op is lane-independent, so untouched lanes
+            # reproduce bitwise and the retry reuses the cached executor.
+            rung += 1
+            _guardrail_stats(report)["damp_retries"] += 1
+            damp = jnp.where(jnp.asarray(bad),
+                             damp * jnp.float32(qc.guardrail_damp_factor),
+                             damp)
+            hd, res1, rtn = stage1(w, st.H, damp)
+            bad = ~_finite_lanes(res1)
+        if bad0.any():
+            gs = _guardrail_stats(report)
+            gs["lanes_flagged"] += int(bad0.sum())
+            gs["lanes_damp_recovered"] += int((bad0 & ~bad).sum())
+            gs["lanes_rtn_forced"] += int(bad.sum())
+        if bad.any():
+            # ladder exhausted → per-group RTN rung. Stage 2 still runs
+            # these lanes under vmap, so feed it sanitized inputs (RTN
+            # weights on the RTN grid, identity curvature): a NaN Γ never
+            # satisfies the early-stop predicate and would pin the whole
+            # group's while_loop at t_max. The mask below discards their
+            # stage-2 output anyway.
+            guarded = np.asarray(bad)
+            if rtn is None:
+                rtn = rtn_quantize_batched(w, bits=qc.bits,
+                                           group_size=qc.group_size,
+                                           symmetric=qc.symmetric)
+            gj = jnp.asarray(guarded)
+            sel3 = gj[:, None, None]
+            hd = jnp.where(sel3, jnp.eye(hd.shape[-1], dtype=hd.dtype), hd)
+            res1 = GPTQResult(jnp.where(sel3, rtn.w_q, res1.w_q),
+                              jnp.where(sel3, rtn.scales, res1.scales),
+                              jnp.where(sel3, rtn.zeros, res1.zeros),
+                              jnp.where(gj, 0.0, res1.err))
     if sync:
         jax.block_until_ready(res1.w_q)
     t1 = time.perf_counter()
@@ -424,6 +503,7 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
              qc.rpiq_early_stop, qc.rpiq_use_global_hessian, qc.rpiq_impl,
              shard_key),
             lambda: _make_stage2(qc, qc.rpiq_impl, gshard))
+        faults.fire("plan.stage2_executor")
         res2 = stage2(res1.w_q, w, x, hd, res1.scales, res1.zeros,
                       h_count=st.count, x_count=xc)
         if sync:
@@ -431,11 +511,12 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
         t2 = time.perf_counter()
         report.seconds_stage2 += t2 - t1
 
-    # starved-expert mask: select the RTN lane (weights AND grid)
+    # starved-expert + guardrail-forced mask: select the RTN lane
+    # (weights AND grid)
     w_final = res2.w_q if do_rpiq else res1.w_q
     scales, zeros = res1.scales, res1.zeros
     if rtn is not None:
-        sel = jnp.asarray(starved)[:, None, None]
+        sel = jnp.asarray(starved | guarded)[:, None, None]
         w_final = jnp.where(sel, rtn.w_q, w_final)
         scales = jnp.where(sel, rtn.scales, scales)
         zeros = jnp.where(sel, rtn.zeros, zeros)
@@ -469,6 +550,9 @@ def _execute_group_batched(qc: QuantConfig, group: QuantGroup,
                 if starved[i]:
                     report.linears.append(LinearRecord(
                         lname, shape, 0.0, [], 0.0, 0, "rtn-fallback", 0.0))
+                elif guarded[i]:
+                    report.linears.append(LinearRecord(
+                        lname, shape, 0.0, [], 0.0, 0, "rtn-guardrail", 0.0))
                 elif do_rpiq:
                     report.linears.append(LinearRecord(
                         lname, shape, float(err1[i]), _gamma_list(hist[i]),

@@ -50,14 +50,19 @@ schedules is pinned in ``tests/test_pipeline_stream.py``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union  # noqa: F401
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union  # noqa: F401
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
-from repro.config import Config
+from repro.config import Config, to_dict
 from repro.core import plan as qplan
-from repro.core.plan import QuantReport
+from repro.core.plan import LinearRecord, QuantReport
 
 PIPELINE_MODES = ("serial", "overlap")
 
@@ -142,6 +147,92 @@ class LayerWalker:
     finalize: Callable[[], Dict]
 
 
+# ---------------------------------------------------------------------------
+# Layer-checkpointed resume (quant.ckpt_dir / quant.resume)
+#
+# At every step boundary the walker persists (a) the residual streams —
+# the Hessian "slot state" every later capture derives from — and (b) the
+# stored quantized subtrees of all completed steps, through
+# distributed/checkpoint.py (atomic tmp+rename, async writer; fences
+# flush synchronously). A killed run restarted with ``quant.resume=auto``
+# replays only the StreamSwitch closures (host-side bookkeeping like the
+# enc→dec memory publication), re-stores the checkpointed subtrees, and
+# continues the walk from the first incomplete step. Because every step's
+# inputs are exactly the checkpointed stream state the original run
+# produced, the resumed walk's artifacts are bitwise-identical to an
+# uninterrupted run (pinned in tests/test_faults.py, serial AND overlap).
+#
+# Cost note: each save snapshots the full stored-subtree dict to host, so
+# checkpoint bandwidth grows with completed-walk size. That is the price
+# of a self-contained latest-step checkpoint (retention gc keeps only
+# ``quant.ckpt_keep``); smoke/tier-1 fixtures are tiny, and real runs
+# amortize it against layer-quantization time.
+# ---------------------------------------------------------------------------
+
+def _resume_fingerprint(cfg: Config) -> str:
+    """Config identity a checkpoint must match to be resumable: everything
+    that shapes the walk EXCEPT the fault plane and the resume/ckpt knobs
+    themselves (a resume run disarms faults and may relocate the dir)."""
+    d = to_dict(cfg)
+    d.pop("faults", None)
+    for k in ("resume", "ckpt_dir", "ckpt_keep"):
+        d.get("quant", {}).pop(k, None)
+    return hashlib.sha256(json.dumps(d, sort_keys=True,
+                                     default=str).encode()).hexdigest()[:16]
+
+
+def _walk_ckpt_tree(streams: Dict[str, List[jax.Array]],
+                    stored: Dict[str, Dict]) -> Dict:
+    """Checkpoint payload: streams keyed slot/index + stored subtrees
+    keyed by step name (both reconstructible blind via load_arrays)."""
+    return {"streams": {slot: {f"{i:03d}": h for i, h in enumerate(hs)}
+                        for slot, hs in streams.items()},
+            "stored": stored}
+
+
+def _restore_from_arrays(arrays: Dict[str, np.ndarray]
+                         ) -> Tuple[Dict[str, List[jax.Array]],
+                                    Dict[str, Dict]]:
+    streams_ix: Dict[str, Dict[int, np.ndarray]] = {}
+    stored: Dict[str, Any] = {}
+    for path, arr in arrays.items():
+        parts = path.split("/")
+        if parts[0] == "streams":
+            streams_ix.setdefault(parts[1], {})[int(parts[2])] = arr
+        elif parts[0] == "stored":
+            node = stored.setdefault(parts[1], {})
+            for p in parts[2:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+    streams = {slot: [jnp.asarray(ix[i]) for i in range(len(ix))]
+               for slot, ix in streams_ix.items()}
+    stored = jax.tree_util.tree_map(jnp.asarray, stored)
+    return streams, stored
+
+
+def _report_state(report: QuantReport, stats: Dict[str, Any]) -> Dict:
+    return {"linears": [dataclasses.asdict(l) for l in report.linears],
+            "seconds_stage1": report.seconds_stage1,
+            "seconds_stage2": report.seconds_stage2,
+            "layer_step_seconds": list(report.layer_step_seconds),
+            "guardrail_stats": dict(report.guardrail_stats),
+            "pipeline_counters": {k: v for k, v in stats.items()
+                                  if isinstance(v, int)}}
+
+
+def _restore_report(report: QuantReport, state: Dict,
+                    stats: Dict[str, Any]) -> None:
+    report.linears[:] = [LinearRecord(**{**d, "shape": tuple(d["shape"])})
+                         for d in state.get("linears", [])]
+    report.seconds_stage1 = float(state.get("seconds_stage1", 0.0))
+    report.seconds_stage2 = float(state.get("seconds_stage2", 0.0))
+    report.layer_step_seconds[:] = state.get("layer_step_seconds", [])
+    report.guardrail_stats.update(state.get("guardrail_stats", {}))
+    for k, v in state.get("pipeline_counters", {}).items():
+        if isinstance(stats.get(k), int):
+            stats[k] += v
+
+
 def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
                fwd_cache: Optional[Dict] = None, mesh=None,
                verbose: bool = False) -> Dict:
@@ -153,8 +244,6 @@ def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
     adds discarded speculative work — so their artifacts (on-grid
     params, Γ histories, packed tensors) are bitwise-identical.
     """
-    from repro.core import pipeline as qpipe   # circular-at-import only
-
     qc = cfg.quant
     mode = qc.pipeline
     if mode not in PIPELINE_MODES:
@@ -165,12 +254,82 @@ def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
     stats = {"mode": mode, "steps": 0, "spec_captures": 0, "repairs": 0,
              "serial_fallbacks": 0}
     items: List[WalkItem] = list(walker.items)
-    spec_for: Optional[LayerStep] = None   # step the in-flight speculative
-    #                                        capture targeted
+
+    ckpt = None
+    fp = None
+    start_idx = 0
+    stored_snap: Dict[str, Dict] = {}   # completed-step subtrees (ckpt state)
+    if qc.ckpt_dir:
+        from repro.distributed.checkpoint import Checkpointer
+        ckpt = Checkpointer(qc.ckpt_dir, keep=qc.ckpt_keep)
+        fp = _resume_fingerprint(cfg)
+        if qc.resume == "auto" and ckpt.latest_step() is not None:
+            arrays, extra = ckpt.load_arrays()
+            if extra.get("walk_fingerprint") != fp:
+                warnings.warn(
+                    "quant.resume=auto: checkpoint in "
+                    f"{qc.ckpt_dir!r} was written by a different config "
+                    "(fingerprint mismatch) — starting fresh", RuntimeWarning)
+            else:
+                start_idx = int(extra["item_idx"]) + 1
+                streams_r, stored_snap = _restore_from_arrays(arrays)
+                # Replay completed items host-side: switches rebuild their
+                # closure side effects (e.g. the enc→dec fence publishing
+                # the cross-attention memory), steps re-store their
+                # checkpointed subtrees. Then overwrite the streams with
+                # the checkpointed values — a replayed switch may reset
+                # its output slot to walk-start state.
+                walker.streams.clear()
+                walker.streams.update({k: list(v)
+                                       for k, v in streams_r.items()})
+                for it in items[:start_idx]:
+                    if isinstance(it, StreamSwitch):
+                        it.run(walker.streams)
+                    else:
+                        it.store(stored_snap[it.name])
+                        it.release_params()
+                walker.streams.update({k: list(v)
+                                       for k, v in streams_r.items()})
+                _restore_report(report, extra.get("report", {}), stats)
+                stats["resumed_at"] = start_idx
+                if verbose:
+                    print(f"  [resume] restarting at item "
+                          f"{start_idx}/{len(items)}")
+
+    def _save(idx: int) -> None:
+        ckpt.save(idx, _walk_ckpt_tree(walker.streams, stored_snap),
+                  extra={"item_idx": idx, "walk_fingerprint": fp,
+                         "report": _report_state(report, stats)})
+
+    try:
+        _run_items(cfg, walker, report, fwd_cache, mesh, verbose, qc,
+                   overlap, use_spec, stats, items, start_idx, ckpt, _save,
+                   stored_snap)
+    finally:
+        # join any in-flight async write before propagating — an orphaned
+        # writer racing a subsequent resume's own saves could publish a
+        # stale LATEST pointer
+        if ckpt is not None:
+            ckpt.wait()
+    report.pipeline_stats = dict(stats)
+    return walker.finalize()
+
+
+def _run_items(cfg, walker, report, fwd_cache, mesh, verbose, qc, overlap,
+               use_spec, stats, items, start_idx, ckpt, save_fn,
+               stored_snap):
+    from repro.core import pipeline as qpipe   # circular-at-import only
+
+    spec_for: Optional[LayerStep] = None
     for idx, item in enumerate(items):
+        if idx < start_idx:
+            continue                  # replayed from checkpoint above
         if isinstance(item, StreamSwitch):
             item.run(walker.streams)
             spec_for = None
+            if ckpt is not None:
+                save_fn(idx)
+                ckpt.wait()           # fences always flush
             continue
         t_step = time.perf_counter()
         hs = walker.streams[item.hs_slot]
@@ -228,7 +387,11 @@ def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
             jax.block_until_ready(walker.streams[item.hs_slot][-1])
         report.layer_step_seconds.append(time.perf_counter() - t_step)
         stats["steps"] += 1
+        if ckpt is not None:
+            # step boundary: the step's artifacts + post-propagate stream
+            # state become durable (async; save() host-snapshots first,
+            # so in-flight speculative work keeps the device busy)
+            stored_snap[item.name] = new_params
+            save_fn(idx)
         if verbose:
             print(f"  {item.name}: {report.summary()}")
-    report.pipeline_stats = dict(stats)
-    return walker.finalize()

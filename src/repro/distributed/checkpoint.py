@@ -40,6 +40,25 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# np.savez silently stores ml_dtypes arrays (bfloat16, ...) as raw void
+# records ("|V2"), which np.load cannot interpret. Encode such leaves as a
+# same-width integer view and record the logical dtype in the manifest;
+# decode restores the view. Bit-exact both ways.
+_NPZ_VIEW_CODEC: Dict[str, str] = {"bfloat16": "uint16"}
+
+
+def _npz_encode(a: np.ndarray) -> np.ndarray:
+    view = _NPZ_VIEW_CODEC.get(str(a.dtype))
+    return a.view(view) if view is not None else a
+
+
+def _npz_decode(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _NPZ_VIEW_CODEC:
+        import ml_dtypes  # noqa: F401  (registers the dtype name with numpy)
+        return a.view(np.dtype(dtype_str))
+    return a
+
+
 def _tree_paths(tree: Any) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
 
@@ -85,6 +104,7 @@ class Checkpointer:
                        for n, a in arrays.items()},
             "extra": extra or {},
         }
+        arrays = {n: _npz_encode(a) for n, a in arrays.items()}
 
         def write():
             try:
@@ -168,7 +188,7 @@ class Checkpointer:
         for name, like in named:
             if name not in data:
                 raise KeyError(f"checkpoint missing leaf {name!r}")
-            arr = data[name]
+            arr = _npz_decode(data[name], manifest["leaves"][name]["dtype"])
             if tuple(arr.shape) != tuple(like.shape):
                 raise ValueError(f"{name}: shape {arr.shape} != "
                                  f"{like.shape} (elastic restore reshards "
@@ -179,6 +199,28 @@ class Checkpointer:
         if shardings is not None:
             tree = jax.device_put(tree, shardings)
         return tree, manifest["extra"]
+
+    def load_arrays(self, step: Optional[int] = None
+                    ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """Blind restore: flat ``{path: host array}`` + the extra dict.
+
+        Unlike :meth:`restore` this needs no ``tree_like`` — callers that
+        rebuild dynamic structures from the stored paths (the quantize
+        resume path reconstructs stream/param trees the fresh process has
+        not materialized yet) use this.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        out = {name: _npz_decode(data[name], meta["dtype"])
+               for name, meta in manifest["leaves"].items()}
+        return out, manifest["extra"]
 
 
 class SignalCheckpointer:

@@ -17,10 +17,12 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import faults
 from repro.kernels import ref
 from repro.kernels.gptq_block import gptq_block_pallas
 from repro.kernels.rpiq_block import rpiq_block_pallas
@@ -36,6 +38,44 @@ def _on_tpu() -> bool:
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# Structured fallback accounting
+#
+# "auto" may resolve away from the pallas kernel because a budget guard
+# (VMEM residency, HBM candidate-stack) failed. That downgrade used to be
+# silent — a wide layer would quietly run the XLA body and the only
+# symptom was a perf cliff. Every budget-driven downgrade now lands here:
+# one warning per (op, reason) per process, plus counters that
+# QuantReport.kernel_fallbacks and the serving engines' engine_stats()
+# surface. Decisions happen at trace time, so a counter increments once
+# per compiled entry, not once per call.
+# ---------------------------------------------------------------------------
+
+_FALLBACK_STATS: dict[str, int] = {}
+_FALLBACK_WARNED: set[str] = set()
+
+
+def fallback_stats() -> dict[str, int]:
+    """Copy of the ``{"op:reason": count}`` auto→xla downgrade counters."""
+    return dict(_FALLBACK_STATS)
+
+
+def reset_fallback_stats() -> None:
+    _FALLBACK_STATS.clear()
+    _FALLBACK_WARNED.clear()
+
+
+def _note_fallback(op: str, reason: str) -> None:
+    key = f"{op}:{reason}"
+    _FALLBACK_STATS[key] = _FALLBACK_STATS.get(key, 0) + 1
+    if key not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(key)
+        warnings.warn(
+            f"kernels.ops.{op}: impl='auto' fell back to the XLA path "
+            f"({reason}); force impl='pallas' to override, or retile",
+            RuntimeWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -84,6 +124,13 @@ def w4a16_default_impl(impl: str):
         _W4A16_DEFAULT_IMPL = prev
 
 
+def _w4a16_vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Per-cell residency upper bound: x + out tiles f32, packed u8 tile,
+    and the dequantized weight tile (f32) the kernel materializes."""
+    return (4 * (block_m * block_k + block_m * block_n
+                 + 2 * block_n * block_k) + block_n * block_k // 2)
+
+
 def w4a16_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
                  zeros: jax.Array, *, group_size: int = 128,
                  impl: str | None = None) -> jax.Array:
@@ -101,6 +148,15 @@ def w4a16_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
     n = packed.shape[0]
     block_m = 128 if m >= 128 else max(8, m)
     block_n, block_k = 128, min(512, k)
+    if (impl == "auto" and _w4a16_vmem_bytes(block_m, block_n, block_k)
+            > _VMEM_BUDGET_BYTES):
+        _note_fallback("w4a16_matmul", "vmem-budget")
+        y = ref.w4a16_matmul_ref(x2, packed, scales, zeros, group_size)
+        return y.reshape(*lead, -1)
+    # fault site: an injected Mosaic/lowering failure at the moment the
+    # fused kernel would be traced — drives the serving engines' runtime
+    # pallas→xla degradation path (docs/SERVING.md §Failure handling)
+    faults.fire("kernels.pallas_dispatch")
     m_pad, n_pad = _round_up(m, block_m), _round_up(n, block_n)
     if m_pad != m:
         x2 = jnp.pad(x2, ((0, m_pad - m), (0, 0)))
@@ -190,10 +246,13 @@ def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
     # whose shard_map hands every device its own (member, Cout-tile) slab —
     # there ``local=True`` and "auto" may pick pallas per shard
     # (DESIGN.md §2.6).  Force impl="pallas" to override by hand.
-    use_pallas = impl == "pallas" or (
-        impl == "auto" and _on_tpu()
-        and (local or jax.device_count() == 1)
-        and _gptq_vmem_bytes(bo, in_dim, blocksize) <= _VMEM_BUDGET_BYTES)
+    use_pallas = impl == "pallas"
+    if (impl == "auto" and _on_tpu()
+            and (local or jax.device_count() == 1)):
+        if _gptq_vmem_bytes(bo, in_dim, blocksize) <= _VMEM_BUDGET_BYTES:
+            use_pallas = True
+        else:
+            _note_fallback("gptq_block", "vmem-budget")
     if not use_pallas:
         from repro.core.gptq import _gptq_xla_batched
         res = _gptq_xla_batched(w, hinv_u, bits=bits, group_size=group_size,
@@ -363,13 +422,16 @@ def rpiq_block(w_init: jax.Array, w_fp: jax.Array, x_last: jax.Array,
     # stays on XLA in multi-device processes (GSPMD partitions the pure-XLA
     # loop exactly; a bare pallas_call carries no sharding rule) — the
     # sharded executor calls back in through rpiq_block_sharded instead.
-    use_pallas = t_max >= 1 and (impl == "pallas" or (
-        impl == "auto" and _on_tpu()
-        and (local or jax.device_count() == 1)
-        and _rpiq_vmem_bytes(bo, in_dim, n, block_size)
-        <= _VMEM_BUDGET_BYTES
-        and _rpiq_hbm_bytes(b, _round_up(out_dim, bo), in_dim, t_max)
-        <= _RPIQ_HBM_BUDGET_BYTES))
+    use_pallas = t_max >= 1 and impl == "pallas"
+    if (t_max >= 1 and impl == "auto" and _on_tpu()
+            and (local or jax.device_count() == 1)):
+        if _rpiq_vmem_bytes(bo, in_dim, n, block_size) > _VMEM_BUDGET_BYTES:
+            _note_fallback("rpiq_block", "vmem-budget")
+        elif (_rpiq_hbm_bytes(b, _round_up(out_dim, bo), in_dim, t_max)
+              > _RPIQ_HBM_BUDGET_BYTES):
+            _note_fallback("rpiq_block", "hbm-budget")
+        else:
+            use_pallas = True
     if not use_pallas:
         if loss_psum_axis is not None:
             # only reachable when a sharded caller forced impl="xla" with
@@ -478,12 +540,20 @@ def rpiq_block_sharded(w_init: jax.Array, w_fp: jax.Array,
         lanes_local = b // (int(mesh.shape[lane_axis])
                             if lane_axis is not None else 1)
         bo = 128 if rows_local >= 128 else _round_up(max(rows_local, 1), 8)
-        pallas_local = t_max >= 1 and (impl == "pallas" or (
-            impl == "auto" and _on_tpu()
-            and _rpiq_vmem_bytes(bo, in_dim, n, block_size)
-            <= _VMEM_BUDGET_BYTES
-            and _rpiq_hbm_bytes(lanes_local, _round_up(rows_local, bo),
-                                in_dim, t_max) <= _RPIQ_HBM_BUDGET_BYTES))
+        pallas_local = t_max >= 1 and impl == "pallas"
+        if t_max >= 1 and impl == "auto" and _on_tpu():
+            if (_rpiq_vmem_bytes(bo, in_dim, n, block_size)
+                    <= _VMEM_BUDGET_BYTES
+                    and _rpiq_hbm_bytes(lanes_local,
+                                        _round_up(rows_local, bo),
+                                        in_dim, t_max)
+                    <= _RPIQ_HBM_BUDGET_BYTES):
+                pallas_local = True
+            else:
+                # budget-rejected per-shard kernel: the twin must also give
+                # up ROW sharding (the XLA body cannot psum mid-loop), so
+                # this downgrade costs layout, not just backend — record it
+                _note_fallback("rpiq_block_sharded", "row-axis-dropped")
         if not pallas_local:
             row_axis = None
     if lane_axis is None and row_axis is None:
@@ -561,4 +631,5 @@ def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
 
 __all__ = ["hessian_accum", "w4a16_matmul", "w4a16_default_impl",
            "quant_pack", "gptq_block", "gptq_block_sharded", "rpiq_block",
-           "rpiq_block_sharded", "selective_scan"]
+           "rpiq_block_sharded", "selective_scan", "fallback_stats",
+           "reset_fallback_stats"]

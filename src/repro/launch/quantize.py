@@ -30,6 +30,7 @@ import jax
 
 from repro.config import apply_overrides, parse_overrides
 from repro.configs.registry import get_config
+from repro.core import faults
 from repro.core.pipeline import pack_for_serving, quantize_model
 from repro.data import MarkovLM, calibration_batches
 from repro.distributed.checkpoint import Checkpointer
@@ -48,6 +49,12 @@ def main(argv=None):
     cfg = get_config(args.arch, smoke=args.smoke)
     apply_overrides(cfg, parse_overrides(args.overrides))
     mc, qc = cfg.model, cfg.quant
+    faults.install_from_config(cfg)
+    if cfg.faults.arm:
+        print(f"[quantize] fault plane armed: {cfg.faults.arm}")
+    if qc.ckpt_dir:
+        print(f"[quantize] step checkpoints → {qc.ckpt_dir} "
+              f"(quant.resume={qc.resume})")
 
     key = jax.random.PRNGKey(0)
     params = (T.init_encdec_params(mc, key) if mc.is_encoder_decoder
@@ -80,6 +87,13 @@ def main(argv=None):
     params_q, report = quantize_model(cfg, params, calib, verbose=True,
                                       mesh=mesh)
     print(f"[quantize] {report.summary()}")
+    if report.pipeline_stats.get("resumed_at") is not None:
+        print(f"[quantize] resumed from checkpoint at walk item "
+              f"{report.pipeline_stats['resumed_at']}")
+    if report.guardrail_stats:
+        print(f"[quantize] guardrail: {report.guardrail_stats}")
+    if report.kernel_fallbacks:
+        print(f"[quantize] kernel fallbacks: {report.kernel_fallbacks}")
     packed = pack_for_serving(cfg, params_q)
 
     os.makedirs(args.out, exist_ok=True)

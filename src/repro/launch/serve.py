@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.config import apply_overrides, parse_overrides
 from repro.configs.registry import get_config
+from repro.core import faults
 from repro.data import MarkovLM
 from repro.models import transformer as T
 from repro.serving.engine import generate
@@ -42,6 +43,9 @@ def main(argv=None):
     cfg = get_config(args.arch, smoke=args.smoke)
     apply_overrides(cfg, parse_overrides(args.overrides))
     mc = cfg.model
+    faults.install_from_config(cfg)
+    if cfg.faults.arm:
+        print(f"[serve] fault plane armed: {cfg.faults.arm}")
 
     key = jax.random.PRNGKey(0)
     if args.params:
@@ -79,6 +83,12 @@ def main(argv=None):
         done = eng.run()
         seqs = [done[r].tokens for r in rids]
         toks = int(sum(len(s) for s in seqs))
+        bad = {r: done[r].status for r in rids if done[r].status != "ok"}
+        if bad:
+            print(f"[serve] non-ok requests: {bad}")
+        if any(done[r].status != "ok" for r in rids) or \
+                any(eng.stats.values()):
+            print(f"[serve] engine stats: {eng.engine_stats()}")
     else:
         res = generate(cfg, params, batch)
         seqs = [res.tokens[i] for i in range(args.batch)]

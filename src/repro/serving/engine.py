@@ -26,12 +26,14 @@ scheduler lives in serving/scheduler.py (docs/SERVING.md).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import Config
+from repro.core import faults
 from repro.kernels import ops as kops
 from repro.models import transformer as T
 
@@ -40,6 +42,50 @@ class GenResult(NamedTuple):
     tokens: jax.Array       # (B, max_new) generated ids (0 on done lanes)
     logprobs: jax.Array     # (B, max_new)
     steps: jax.Array        # (B,) tokens actually produced (pre-eos)
+
+
+# -- failure accounting -------------------------------------------------------
+#
+# Every runtime degradation is counted, never silent (docs/SERVING.md
+# "Failure handling"). The static generate() loop below and the continuous
+# scheduler both funnel pallas→xla downgrades through this counter.
+
+_ENGINE_STATS: Dict[str, int] = {"kernel_degradations": 0}
+
+
+def engine_stats() -> Dict[str, int]:
+    """Snapshot of engine-level failure counters (see also
+    ``kernels.ops.fallback_stats`` for trace-time budget fallbacks)."""
+    return dict(_ENGINE_STATS)
+
+
+def _kernel_fault(e: Exception) -> bool:
+    """Is this exception a kernel-path failure worth degrading over?
+
+    Injected faults carry a ``.site`` — only ``kernels.pallas_dispatch``
+    counts (other sites must propagate to their own handlers). A real
+    exception from inside a pallas dispatch has no site attribute and is
+    treated as a kernel fault by the caller that just ran one.
+    """
+    site = getattr(e, "site", None)
+    if site is not None:
+        return site == "kernels.pallas_dispatch"
+    return True
+
+
+def decode_step_guarded(cfg: Config, params: Any, token: jax.Array,
+                        pos: jax.Array, caches: Any
+                        ) -> Tuple[jax.Array, jax.Array, Any]:
+    """Greedy decode step with a fused finite-logits flag.
+
+    Returns ``(next_token, ok, caches)`` where ``ok`` is a (B,) bool —
+    False on any lane whose logits went non-finite (NaN/Inf poisoning, e.g.
+    a corrupted KV lane). One dispatch, two (B,)-sized transfers: the
+    quarantine check costs no extra logits round-trip.
+    """
+    lg, caches = serve_step(cfg, params, token, pos, caches)
+    ok = jnp.all(jnp.isfinite(lg), axis=-1)
+    return jnp.argmax(lg, axis=-1).astype(jnp.int32), ok, caches
 
 
 def serve_step(cfg: Config, params: Any, token: jax.Array, pos: jax.Array,
@@ -112,10 +158,28 @@ def generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,
              max_new_tokens: Optional[int] = None, eos_id: int = -1,
              temperature: Optional[float] = None,
              seed: int = 0) -> GenResult:
-    """Greedy/temperature generation. Static shapes; jit-compiled loop."""
-    with kops.w4a16_default_impl(cfg.serve.w4a16_impl):
-        return _generate(cfg, params, batch, max_new_tokens=max_new_tokens,
-                         eos_id=eos_id, temperature=temperature, seed=seed)
+    """Greedy/temperature generation. Static shapes; jit-compiled loop.
+
+    A kernel fault on the pallas w4a16 path degrades this call to the xla
+    reference backend and retries once — counted in ``engine_stats()``,
+    never silent.
+    """
+    impl = cfg.serve.w4a16_impl
+    try:
+        with kops.w4a16_default_impl(impl):
+            return _generate(cfg, params, batch,
+                             max_new_tokens=max_new_tokens, eos_id=eos_id,
+                             temperature=temperature, seed=seed)
+    except Exception as e:                      # noqa: BLE001 — classified
+        if impl == "xla" or not _kernel_fault(e):
+            raise
+        _ENGINE_STATS["kernel_degradations"] += 1
+        warnings.warn(f"w4a16 kernel fault ({e!r}): degrading generate() "
+                      "to impl='xla'", RuntimeWarning, stacklevel=2)
+        with kops.w4a16_default_impl("xla"):
+            return _generate(cfg, params, batch,
+                             max_new_tokens=max_new_tokens, eos_id=eos_id,
+                             temperature=temperature, seed=seed)
 
 
 def _generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,

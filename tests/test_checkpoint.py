@@ -105,3 +105,61 @@ class TestTrainerIntegration:
             assert sig.requested
         finally:
             sig.uninstall()
+
+
+class TestPackedServingArtifacts:
+    """Round-tripping quantized serving artifacts (int4-packed trees with
+    QuantizedTensor pytree leaves + scale/zero metadata) and the raw-array
+    loader the quantize-resume path uses."""
+
+    def _packed(self):
+        from repro.core.pipeline import pack_for_serving
+        from repro.models import transformer as T
+        cfg = get_config("opt-proxy", smoke=True)
+        params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+        return pack_for_serving(cfg, params)
+
+    def test_packed_tree_roundtrip_bitwise(self, tmp_path):
+        packed = self._packed()
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(1, packed, extra={"arch": "opt-proxy"})
+        restored, extra = ck.restore(packed)
+        assert extra["arch"] == "opt-proxy"
+        ref = jax.tree_util.tree_leaves(packed)
+        got = jax.tree_util.tree_leaves(restored)
+        assert len(ref) == len(got)
+        for a, b in zip(ref, got):
+            a, b = np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b))
+            assert a.dtype == b.dtype           # uint8 codes stay uint8
+            np.testing.assert_array_equal(a, b)
+
+    def test_bfloat16_leaves_roundtrip_bitwise(self, tmp_path):
+        """np.savez silently stores bf16 as raw void bytes; the codec must
+        view-encode/decode so restore returns real bf16 values."""
+        tree = {"h": (jnp.arange(16, dtype=jnp.bfloat16) / 3.0),
+                "f": jnp.linspace(0, 1, 7, dtype=jnp.float32)}
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(2, tree)
+        restored, _ = ck.restore(tree)
+        assert restored["h"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(tree["h"]).view(np.uint16),
+            np.asarray(restored["h"]).view(np.uint16))
+        np.testing.assert_array_equal(np.asarray(tree["f"]),
+                                      np.asarray(restored["f"]))
+
+    def test_load_arrays_without_template(self, tmp_path):
+        """load_arrays returns the name→array dict + extra with no template
+        tree — what quantize-resume uses before the walker exists."""
+        tree = {"streams": {"resid": {"000": jnp.ones((2, 3), jnp.bfloat16)}},
+                "stored": {"layer0": {"w": jnp.arange(4.0)}}}
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(5, tree, extra={"item_idx": 1})
+        arrays, extra = ck.load_arrays()
+        assert extra["item_idx"] == 1
+        key = [k for k in arrays if "resid" in k][0]
+        assert arrays[key].dtype == np.dtype("bfloat16")
+        np.testing.assert_array_equal(
+            arrays[key], np.ones((2, 3), np.dtype("bfloat16")))
+        with pytest.raises(FileNotFoundError):
+            Checkpointer(str(tmp_path / "empty")).load_arrays()
