@@ -12,6 +12,7 @@ import numpy as np
 from repro.config import Config
 from repro.configs import get_config
 from repro.data import MarkovLM, SentimentTask, calibration_batches
+from repro.models import attention as A
 from repro.models import transformer as T
 from repro.training.train_step import init_train_state, make_train_step
 
@@ -85,3 +86,27 @@ def param_bytes(params) -> int:
     return sum(l.size * l.dtype.itemsize
                for l in jax.tree_util.tree_leaves(params)
                if hasattr(l, "dtype"))
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def cache_bytes_per_seq(mc, max_len: int, cache_dtype) -> int:
+    """Decode-cache bytes for ONE sequence at capacity ``max_len``, measured
+    via ``jax.eval_shape`` over the real cache constructors — the same
+    layouts the engines allocate, nothing materialized. ``cache_dtype`` is a
+    jnp dtype or the ``"int8"`` sentinel; for int8 the codes, per-block
+    scales and error-feedback accumulators are all counted, and leaves the
+    sentinel keeps in float (MLA latents, recurrent states, enc-dec
+    cross-KV) are counted at their actual precision."""
+    if mc.is_encoder_decoder:
+        self_b = _tree_bytes(jax.eval_shape(
+            lambda: A.init_kv_cache(mc, 1, max_len, cache_dtype)))
+        cross_dtype = jnp.dtype(T._float_cache_dtype(cache_dtype))
+        cross_b = 2 * mc.encoder_seq_len * mc.num_kv_heads * mc.head_dim \
+            * cross_dtype.itemsize
+        return mc.num_layers * (self_b + cross_b)
+    return _tree_bytes(jax.eval_shape(
+        lambda: T.init_block_caches(mc, 1, max_len, cache_dtype)))

@@ -27,6 +27,14 @@ the first; batch-amortized for static), and batch-occupancy (fraction of
 decode-lane-steps doing useful work). Schema + regeneration contract:
 docs/BENCHMARKS.md; full (non ``--tiny``) runs rewrite BENCH_serving.json
 at the repo root.
+
+The ``longctx`` trace compares decode-cache precisions at an **equal
+memory budget**: the budget is what ``serve.max_batch`` fp16 lanes cost at
+the trace's context cap (``common.cache_bytes_per_seq``), and each
+``serve.kv_cache`` setting gets however many lanes fit in that budget —
+int8's smaller per-sequence footprint buys it more concurrent lanes, which
+is the deployment form of the memory claim (occupancy/TTFT at fixed HBM,
+not bytes in the abstract).
 """
 from __future__ import annotations
 
@@ -38,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_config
+from benchmarks.common import bench_config, cache_bytes_per_seq
 from repro.core.pipeline import pack_for_serving
 from repro.models import transformer as T
 from repro.serving.engine import generate
@@ -286,15 +294,63 @@ def run(tiny: bool = False) -> List[Dict]:
             m = _run_continuous(ocfg, wparams, reqs, oarr, max_len)
             rows.append(_row(arch, wname, "continuous", "overload", n, cfg,
                              ocfg, m))
+        rows.extend(_run_longctx(arch, cfg, params, tiny, load_factor))
     return rows
 
 
-def _row(arch, wname, sched, trace, n, cfg, scfg, m) -> Dict:
+def _run_longctx(arch, cfg, params, tiny: bool, load_factor: float
+                 ) -> List[Dict]:
+    """Equal-memory-budget long-context trace: fp16 vs int8 decode cache,
+    each with the lane count its per-sequence footprint affords (module
+    docstring). fp16 weights on both sides so the A/B isolates the cache."""
+    mc = cfg.model
+    rng = np.random.default_rng(3)
+    plens = (8, 12) if tiny else (24, 40, 56)
+    mnews = (2, 4) if tiny else (4, 8, 12)
+    n = 6 if tiny else 16
+    reqs = []
+    for _ in range(n):
+        s0 = int(rng.choice(plens))
+        toks = rng.integers(1, mc.vocab_size, size=(1, s0)).astype(np.int32)
+        b = {"tokens": jnp.asarray(toks)}
+        if mc.is_encoder_decoder:
+            b["frames"] = jnp.asarray(rng.standard_normal(
+                (1, mc.encoder_seq_len, mc.d_model)).astype(np.float32))
+        reqs.append({"batch": b, "max_new": int(rng.choice(mnews))})
+    max_len = max(r["batch"]["tokens"].shape[1] + r["max_new"]
+                  for r in reqs) + 2
+    bytes_fp16 = cache_bytes_per_seq(mc, max_len, jnp.bfloat16)
+    bytes_int8 = cache_bytes_per_seq(mc, max_len, "int8")
+    budget = cfg.serve.max_batch * bytes_fp16
+    lanes_of = {"fp16": cfg.serve.max_batch,
+                "int8": max(cfg.serve.max_batch, budget // bytes_int8)}
+    bytes_of = {"fp16": bytes_fp16, "int8": bytes_int8}
+    # one arrival process for both precisions, calibrated on the fp16 side
+    fcfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+        cfg.serve, scheduler="continuous", kv_cache="fp16"))
+    sat = _run_continuous(fcfg, params, reqs, np.zeros(n, np.float64),
+                          max_len)
+    arrivals = _arrivals(reqs, n * load_factor / sat["busy_s"],
+                         np.random.default_rng(4))
+    rows = []
+    for kvc in ("fp16", "int8"):
+        kcfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+            cfg.serve, scheduler="continuous", kv_cache=kvc,
+            max_batch=int(lanes_of[kvc])))
+        m = _run_continuous(kcfg, params, reqs, arrivals, max_len)
+        rows.append(_row(arch, "fp16", "continuous", "longctx", n, kcfg,
+                         kcfg, m,
+                         cache_bytes_per_seq=int(bytes_of[kvc]),
+                         cache_budget_bytes=int(budget)))
+    return rows
+
+
+def _row(arch, wname, sched, trace, n, cfg, scfg, m, **extra) -> Dict:
     tt, tp = _pct(m["ttft"]), _pct(m["tpot"])
     stats = m.get("stats", {})
     return {
         "config": arch, "weights": wname, "scheduler": sched,
-        "trace": trace,
+        "trace": trace, "kv_cache": scfg.serve.kv_cache,
         "n_requests": n, "lanes": cfg.serve.max_batch,
         "prefill_chunk": scfg.serve.prefill_chunk,
         "tokens_total": m["tokens_total"],
@@ -313,4 +369,5 @@ def _row(arch, wname, sched, trace, n, cfg, scfg, m) -> Dict:
         "completed": m.get("completed", n),
         "timeout_evictions": stats.get("timeout_evictions", 0),
         "rejections": stats.get("rejections", 0),
+        **extra,
     }

@@ -5,12 +5,21 @@ vs O(‖[X^(1..k)]‖) for all-batch schemes. Measured as actual resident array
 bytes for the pipeline's stage-2 inputs across calibration-set sizes, plus
 the deployment memory claim (paper abstract: 60-75% reduction): bf16 vs
 int4-packed weight bytes per arch.
+
+``table3-kv`` rows measure decode-cache bytes per sequence (eval_shape over
+the real cache constructors, benchmarks/common.cache_bytes_per_seq): fp32 /
+fp16 / int8 per arch per context length, with both reduction ratios. The
+int8 layout pays per-block f32 scales + error-feedback accumulators on top
+of the 1-byte codes, so the honest ceiling vs fp16 is < 2×; the ≥3.5×
+reduction lands on the fp32 column. Architectures whose caches the sentinel
+keeps in float (MLA latents, recurrent states) report ratios near 1 — that
+is the measured truth, not a bug.
 """
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import bench_config, param_bytes
+from benchmarks.common import bench_config, cache_bytes_per_seq, param_bytes
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.hlo_analysis import total_param_count
 
@@ -49,4 +58,25 @@ def run() -> list:
             "int4_GB": round(int4 / 2**30, 2),
             "reduction_pct": round(100 * (1 - int4 / bf16), 1),
         })
+
+    # decode-cache residency: bytes per sequence at each context length,
+    # per cache precision (serve.kv_cache knob; docs/SERVING.md)
+    import jax.numpy as jnp
+    for arch in ARCH_IDS:
+        mc = get_config(arch).model
+        for ctx in (512, 2048, 8192):
+            if ctx > mc.max_seq_len:
+                continue
+            fp32 = cache_bytes_per_seq(mc, ctx, jnp.float32)
+            fp16 = cache_bytes_per_seq(mc, ctx, jnp.float16)
+            int8 = cache_bytes_per_seq(mc, ctx, "int8")
+            rows.append({
+                "table": "table3-kv", "arch": arch, "ctx": ctx,
+                "fp32_bytes_per_seq": fp32,
+                "fp16_bytes_per_seq": fp16,
+                "int8_bytes_per_seq": int8,
+                "int8_bytes_per_token": round(int8 / ctx, 1),
+                "ratio_vs_fp32": round(fp32 / int8, 2),
+                "ratio_vs_fp16": round(fp16 / int8, 2),
+            })
     return rows

@@ -14,7 +14,17 @@ fi
 # (the DESIGN.md §2 citation dangled for three PRs — never again)
 python scripts/docs_xref.py
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+# main leg runs everything except the heavy serving matrices, which get
+# their own leg below (registered `serving` marker, pyproject.toml) — the
+# bare tier-1 recipe (ROADMAP.md: pytest -x -q with no marker filter)
+# still runs both sets in one pass
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q -m "not serving" "$@"
+
+# serving leg: continuous-scheduler + quantized-decode matrices
+# (tests/test_serving.py, tests/test_kv_cache.py)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q -m serving
 
 # multi-host-device leg: sharded group execution parity on a forced
 # 4-device host mesh (tests/test_plan_sharded.py skips in the
@@ -63,3 +73,15 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run serving --t
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m repro.launch.serve --arch opt-proxy --smoke --pack-rtn \
   --batch 2 --prompt-len 8 serve.max_new_tokens=4 serve.scheduler=continuous
+
+# coverage leg: per-module line coverage for the serving + kernel surfaces
+# (pytest-cov is in requirements-dev.txt; skipped with a note when the
+# container has no network to install it — never a hard dependency)
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q \
+    tests/test_serving.py tests/test_kv_cache.py tests/test_kv_codec.py \
+    --cov=repro.serving --cov=repro.kernels --cov-report=term-missing
+else
+  echo "NOTE: pytest_cov not installed; skipping the coverage leg" >&2
+fi

@@ -298,6 +298,22 @@ class ServeConfig:
     #                                 kernel fault the continuous engine
     #                                 degrades pallas→xla at runtime
     #                                 (docs/SERVING.md §Failure handling)
+    kv_cache: str = "fp16"          # fp16 | int8: decode KV-cache precision.
+    #                                 "int8" stores per-block absmax codes +
+    #                                 f32 scales (kernels/kv_codec.py, the
+    #                                 wire codec lifted into the cache) with
+    #                                 per-lane error feedback on decode
+    #                                 appends; MLA latents, recurrent states
+    #                                 and enc-dec cross-KV stay bf16
+    #                                 (docs/SERVING.md)
+    kv_impl: str = "auto"           # auto | pallas | xla: int8-KV decode
+    #                                 attention backend (kernels/ops.
+    #                                 int8_kv_attention — fused dequant
+    #                                 flash-decode kernel on TPU, XLA
+    #                                 full-dequant oracle elsewhere; same
+    #                                 dispatch/degradation discipline as
+    #                                 w4a16_impl). No effect unless
+    #                                 kv_cache="int8"
     request_timeout_s: float = 0.0  # per-request deadline (0 = none): a
     #                                 request past its deadline — queued,
     #                                 prefilling, parked, or decoding — is

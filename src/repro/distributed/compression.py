@@ -12,6 +12,11 @@ trainer mode). Two codecs:
 Both keep an **error-feedback** accumulator: ``e ← g − dec(enc(g + e))``,
 so the compression bias doesn't accumulate over steps (Karimireddy et al.);
 without it int8 all-reduce visibly degrades convergence (tested).
+
+The int8 block codec itself lives in :mod:`repro.kernels.kv_codec` — one
+implementation shared with the quantized decode KV cache, with the block
+size parameterized (the wire default stays :data:`kv_codec.WIRE_BLOCK` =
+256, pinned bitwise-unchanged in ``tests/test_kv_codec.py``).
 """
 from __future__ import annotations
 
@@ -20,25 +25,17 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-_BLOCK = 256
+from repro.kernels import kv_codec
+
+_BLOCK = kv_codec.WIRE_BLOCK
 
 
 def _enc_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    flat = g.reshape(-1)
-    n = flat.shape[0]
-    nb = -(-n // _BLOCK)
-    flat = jnp.pad(flat, (0, nb * _BLOCK - n)).reshape(nb, _BLOCK)
-    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127)
-    return q.astype(jnp.int8), scale.astype(jnp.float32)
+    return kv_codec.enc_int8(g, block=_BLOCK)
 
 
 def _dec_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
-    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
-    n = 1
-    for d in shape:
-        n *= d
-    return flat[:n].reshape(shape)
+    return kv_codec.dec_int8(q, scale, shape, block=_BLOCK)
 
 
 def compress_psum(grads: Any, axis_name: str, method: str = "none",

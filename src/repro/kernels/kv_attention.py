@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused int8-KV dequant + decode attention.
+
+The sequel to ``w4a16_matmul`` on the serving hot path: one-token GQA
+decode against an int8-quantized KV cache (``kernels/kv_codec.py`` blocked
+layout). The XLA reference dequantizes the whole cache to f32 before the
+score/value einsums — an HBM materialization of the full history per layer
+per step. This kernel instead streams (bs, hd) int8 tiles of K/V history
+into VMEM, dequantizes in VREGs (broadcasted per-block scale multiply, the
+``w4a16`` move), and folds them into a flash-decode online softmax — so
+int8 history never exists as a full fp16/f32 tensor in HBM:
+
+  - grid (B, KV_heads, S/bs) with the history axis innermost (sequential
+    accumulation per (batch, kv-head) cell);
+  - running max ``m`` / denominator ``l`` / accumulator ``acc`` live in
+    VMEM scratch across history tiles (m/l replicated over a 128-lane
+    minor dim for TPU vector geometry);
+  - invalid slots (kpos < 0: unwritten ring positions, padding) are masked
+    to -1e30 *and* re-zeroed post-exp — a fully-masked tile otherwise
+    contributes exp(-1e30 - (-1e30)) = 1 per slot;
+  - queries arrive pre-scaled (hd^-0.5 folded in by the caller, matching
+    ``attention_decode``'s fp16 path); softcap applies before masking.
+
+Validated in interpret mode on CPU against ``ref.int8_kv_attention_ref``;
+on TPU the same kernel lowers via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK_S = 128
+_MIN_LANES = 128                      # f32 minor-dim tile for m/l scratch
+
+
+def _kv_attn_kernel(q_ref, kc_ref, ks_ref, vc_ref, vs_ref, kpos_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, kv_block: int, softcap: float,
+                    n_s_steps: int, out_dtype):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (R, hd)
+    kc = kc_ref[0, :, 0, :].astype(jnp.float32)             # (bs, hd)
+    ks = ks_ref[0, :, 0, :].astype(jnp.float32)             # (bs, nb)
+    k = kc * jnp.repeat(ks, kv_block, axis=1)               # dequant in VREGs
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),  # q @ k.T
+                            preferred_element_type=jnp.float32)  # (R, bs)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = kpos_ref[0, :] >= 0                             # (bs,)
+    s = jnp.where(valid[None, :], s, -1e30)
+
+    m_prev = m_ref[...]                                     # (R, 128)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)                         # (R, 128)
+    p = jnp.exp(s - m_cur[:, :1])                           # (R, bs)
+    # fully-masked slots: exp(-1e30 - m) is 1 when m is still -1e30
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_cur
+
+    vc = vc_ref[0, :, 0, :].astype(jnp.float32)             # (bs, hd)
+    vs = vs_ref[0, :, 0, :].astype(jnp.float32)             # (bs, nb)
+    v = vc * jnp.repeat(vs, kv_block, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),                     # p @ v
+        preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_s_steps - 1)
+    def _store():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "kv_block", "softcap", "block_s", "interpret"))
+def int8_kv_attention_pallas(q: jax.Array, k_codes: jax.Array,
+                             k_scales: jax.Array, v_codes: jax.Array,
+                             v_scales: jax.Array, kpos: jax.Array, *,
+                             kv_block: int, softcap: float = 0.0,
+                             block_s: int = DEFAULT_BLOCK_S,
+                             interpret: bool = True) -> jax.Array:
+    """q: (B, KV, R, hd) pre-scaled; k/v codes: (B, S, KV, hd) int8;
+    k/v scales: (B, S, KV, hd//kv_block) f32; kpos: (B, S) int32 with -1
+    marking invalid slots. Returns (B, KV, R, hd) in q.dtype.
+
+    Shape divisibility (S % block_s == 0) is the caller's contract
+    (ops.py pads with kpos=-1 sentinels).
+    """
+    b, kv, r, hd = q.shape
+    s_len = k_codes.shape[1]
+    nb = hd // kv_block
+    assert k_scales.shape[-1] == nb, (k_scales.shape, kv_block)
+    assert s_len % block_s == 0, (s_len, block_s)
+    grid = (b, kv, s_len // block_s)
+    kernel = functools.partial(_kv_attn_kernel, kv_block=kv_block,
+                               softcap=softcap, n_s_steps=grid[2],
+                               out_dtype=q.dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, r, hd), lambda i, j, s: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, block_s, 1, nb), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, block_s, 1, nb), lambda i, j, s: (i, s, j, 0)),
+            pl.BlockSpec((1, block_s), lambda i, j, s: (i, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r, hd), lambda i, j, s: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, r, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((r, hd), jnp.float32),
+                        pltpu.VMEM((r, _MIN_LANES), jnp.float32),
+                        pltpu.VMEM((r, _MIN_LANES), jnp.float32)],
+        interpret=interpret,
+    )(q, k_codes, k_scales, v_codes, v_scales, kpos)

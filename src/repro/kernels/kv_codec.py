@@ -1,0 +1,90 @@
+"""Shared per-block absmax int8 codec (wire compression + KV cache).
+
+One quantization scheme, two consumers:
+
+  - the gradient all-reduce wire format (``distributed/compression.py``,
+    flat blocks of :data:`WIRE_BLOCK` elements over the raveled tensor), and
+  - the quantized decode KV cache (``models/attention.py``, blocks along
+    the trailing head dim so each cached (position, kv-head) row carries
+    its own scales and can be dequantized per attention tile).
+
+Both entry points share the same per-block math — ``scale = absmax/127 +
+1e-12``, symmetric round-to-nearest clipped to [-127, 127] — so the codec
+property suite (``tests/test_kv_codec.py``) pins one semantics for both
+paths and the wire format stays bitwise-identical to the pre-extraction
+``compression._enc_int8``/``_dec_int8`` at the default block size.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Default block for the flat/wire entry points — the historical
+# compression.py constant. The KV path picks its block per head dim
+# (:func:`default_kv_block`) instead.
+WIRE_BLOCK = 256
+
+
+def enc_int8(g: jax.Array, block: int = WIRE_BLOCK
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Flat encode: ravel, pad to a block multiple, quantize per block.
+
+    Returns ``(codes int8 (nb, block), scales f32 (nb,))``.
+    """
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // block)
+    flat = jnp.pad(flat, (0, nb * block - n)).reshape(nb, block)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dec_int8(q: jax.Array, scale: jax.Array, shape,
+             block: int = WIRE_BLOCK) -> jax.Array:
+    """Flat decode: dequantize, drop the padding tail, restore ``shape``."""
+    del block  # the codes carry the block as their trailing dim
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    return flat[:math.prod(shape)].reshape(shape)
+
+
+def default_kv_block(head_dim: int) -> int:
+    """KV-cache block size for a given head dim: the largest of (128, 64,
+    32) dividing it, else the head dim itself. A divisor keeps the scale
+    leaf shape ``(..., head_dim // block)`` — no padding inside cache
+    leaves, and the block is recoverable from the leaf shapes alone."""
+    for b in (128, 64, 32):
+        if head_dim % b == 0:
+            return b
+    return head_dim
+
+
+def enc_int8_blocks(x: jax.Array, block: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Blocked encode along the trailing axis (the KV-cache layout).
+
+    x: (..., d) with ``d % block == 0``. Returns ``(codes int8 (..., d),
+    scales f32 (..., d // block))`` — codes keep x's shape, so cache
+    update indexing is identical for the codes and the fp leaves.
+    """
+    d = x.shape[-1]
+    assert d % block == 0, (x.shape, block)
+    nb = d // block
+    xb = x.astype(jnp.float32).reshape(x.shape[:-1] + (nb, block))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    return (q.astype(jnp.int8).reshape(x.shape),
+            scale.astype(jnp.float32))
+
+
+def dec_int8_blocks(codes: jax.Array, scales: jax.Array,
+                    block: int) -> jax.Array:
+    """Blocked decode: ``codes (..., d) int8, scales (..., d // block)`` →
+    f32 (..., d)."""
+    d = codes.shape[-1]
+    nb = d // block
+    cb = codes.astype(jnp.float32).reshape(codes.shape[:-1] + (nb, block))
+    return (cb * scales.astype(jnp.float32)[..., None]).reshape(codes.shape)

@@ -30,6 +30,7 @@ from repro.kernels.hessian_accum import hessian_accum_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
 from repro.kernels.selective_scan import selective_scan_pallas
 from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
+from repro.kernels.kv_attention import int8_kv_attention_pallas
 
 
 def _on_tpu() -> bool:
@@ -169,6 +170,88 @@ def w4a16_matmul(x: jax.Array, packed: jax.Array, scales: jax.Array,
                             block_m=block_m, block_n=block_n, block_k=block_k,
                             interpret=not _on_tpu())
     return y[:m, :n].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# decode attention against an int8 KV cache (fused dequant)
+# ---------------------------------------------------------------------------
+
+# Same contract as _W4A16_DEFAULT_IMPL: the serving engines install
+# cfg.serve.kv_impl here at trace time, because attention_decode sits under
+# the jitted decode step and cannot thread an impl argument without
+# widening every model signature. Engines key compiled entries on the
+# installed impl (docs/SERVING.md).
+_KV_ATTN_DEFAULT_IMPL = "auto"
+
+
+@contextlib.contextmanager
+def kv_attn_default_impl(impl: str):
+    """Scoped override of the int8_kv_attention default backend."""
+    global _KV_ATTN_DEFAULT_IMPL
+    assert impl in ("auto", "pallas", "xla"), impl
+    prev = _KV_ATTN_DEFAULT_IMPL
+    _KV_ATTN_DEFAULT_IMPL = impl
+    try:
+        yield
+    finally:
+        _KV_ATTN_DEFAULT_IMPL = prev
+
+
+def _kv_attn_vmem_bytes(block_s: int, r: int, hd: int, nb: int) -> int:
+    """Per-cell residency: q/acc/out tiles + two dequantized (bs, hd) K/V
+    tiles f32, the int8 code tiles, scale tiles, and the m/l scratch."""
+    return (4 * (3 * r * hd + 2 * block_s * hd + 2 * block_s * nb
+                 + 2 * r * 128 + r * block_s)
+            + 2 * block_s * hd)
+
+
+def int8_kv_attention(q: jax.Array, k_codes: jax.Array, k_scales: jax.Array,
+                      v_codes: jax.Array, v_scales: jax.Array,
+                      kpos: jax.Array, *, kv_block: int,
+                      softcap: float = 0.0,
+                      impl: str | None = None) -> jax.Array:
+    """One-token GQA decode against an int8 KV cache (kernels/kv_codec.py).
+
+    q: (B, KV, R, hd) pre-scaled queries; k/v codes: (B, S, KV, hd) int8;
+    k/v scales: (B, S, KV, hd//kv_block) f32; kpos: (B, S) int32 slot
+    positions, -1 = invalid (causal/window validity is encoded by the
+    caller). Returns (B, KV, R, hd) in q.dtype.
+    """
+    if impl is None:
+        impl = _KV_ATTN_DEFAULT_IMPL
+    assert impl in ("auto", "pallas", "xla"), impl
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        return ref.int8_kv_attention_ref(q, k_codes, k_scales, v_codes,
+                                         v_scales, kpos, kv_block, softcap)
+    b, s, kv, hd = k_codes.shape
+    r = q.shape[2]
+    nb = hd // kv_block
+    block_s = 128 if s >= 128 else _round_up(s, 8)
+    if (impl == "auto" and _kv_attn_vmem_bytes(block_s, max(r, 8), hd, nb)
+            > _VMEM_BUDGET_BYTES):
+        _note_fallback("int8_kv_attention", "vmem-budget")
+        return ref.int8_kv_attention_ref(q, k_codes, k_scales, v_codes,
+                                         v_scales, kpos, kv_block, softcap)
+    # fault site shared with w4a16_matmul: an injected lowering failure at
+    # the moment the fused kernel would be traced drives the engines'
+    # pallas→xla degradation path (docs/SERVING.md §Failure handling)
+    faults.fire("kernels.pallas_dispatch")
+    s_pad = _round_up(s, block_s)
+    if s_pad != s:
+        k_codes = jnp.pad(k_codes, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v_codes = jnp.pad(v_codes, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        k_scales = jnp.pad(k_scales,
+                           ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        v_scales = jnp.pad(v_scales,
+                           ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, s_pad - s)), constant_values=-1)
+    r_pad = _round_up(r, 8)
+    if r_pad != r:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, r_pad - r), (0, 0)))
+    y = int8_kv_attention_pallas(q, k_codes, k_scales, v_codes, v_scales,
+                                 kpos, kv_block=kv_block, softcap=softcap,
+                                 block_s=block_s, interpret=not _on_tpu())
+    return y[:, :, :r]
 
 
 # ---------------------------------------------------------------------------
@@ -630,6 +713,7 @@ def selective_scan(u, dt, bm, cm, a_log, d_skip, h0, *, impl: str = "auto",
 
 
 __all__ = ["hessian_accum", "w4a16_matmul", "w4a16_default_impl",
+           "int8_kv_attention", "kv_attn_default_impl",
            "quant_pack", "gptq_block", "gptq_block_sharded", "rpiq_block",
            "rpiq_block_sharded", "selective_scan", "fallback_stats",
            "reset_fallback_stats"]

@@ -39,6 +39,33 @@ def w4a16_matmul_ref(x: jax.Array, packed: jax.Array, scales: jax.Array,
     return y.astype(x.dtype)
 
 
+def int8_kv_attention_ref(q: jax.Array, k_codes: jax.Array,
+                          k_scales: jax.Array, v_codes: jax.Array,
+                          v_scales: jax.Array, kpos: jax.Array,
+                          kv_block: int, softcap: float = 0.0) -> jax.Array:
+    """Decode GQA attention against an int8 KV cache, full-dequant oracle.
+
+    q: (B, KV, R, hd) pre-scaled (hd^-0.5 folded in by the caller);
+    k/v codes: (B, S, KV, hd) int8; k/v scales: (B, S, KV, hd//kv_block)
+    f32; kpos: (B, S) int32, -1 marks invalid slots (the caller encodes
+    causal/window validity into kpos). Returns (B, KV, R, hd) in q.dtype
+    with f32 score/value accumulation. Materializes the dequantized cache
+    — the HBM cost the fused kernel avoids.
+    """
+    from repro.kernels import kv_codec
+    k = kv_codec.dec_int8_blocks(k_codes, k_scales, kv_block)  # (B,S,KV,hd)
+    v = kv_codec.dec_int8_blocks(v_codes, v_scales, kv_block)
+    s = jnp.einsum("bgrd,bsgd->bgrs", q.astype(jnp.float32), k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(kpos[:, None, None, :] >= 0, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype)
+
+
 def selective_scan_ref(u: jax.Array, dt: jax.Array, bm: jax.Array,
                        cm: jax.Array, a_log: jax.Array, d_skip: jax.Array,
                        h0: jax.Array):

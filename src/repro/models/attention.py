@@ -15,6 +15,16 @@ Cache layouts (per layer):
   MLA:        {"ckv": (B, S_max, kv_lora_rank), "krope": (B, S_max, r_hd)}
               — the compressed latent is cached, not per-head K/V; this is
               MLA's decode-memory win and it is preserved here.
+
+Quantized GQA caches (``dtype="int8"``, the ``serve.kv_cache=int8`` knob):
+the ``"k"``/``"v"`` leaves hold int8 codes at the same shapes, paired with
+per-(position, kv-head, block) f32 scale leaves ``"k_scale"``/``"v_scale"``
+(block = ``kv_codec.default_kv_block(head_dim)``) and per-lane f32
+error-feedback accumulators ``"k_err"``/``"v_err"`` (B, KV, hd) that decode
+appends fold in (``e ← x − dec(enc(x + e))``) so quantization bias doesn't
+compound over decode steps. Every leaf keeps batch at axis 1 after layer
+stacking, so the slot API in models/transformer.py works unchanged —
+``cache_slot_evict``'s lane zeroing resets the accumulator with the lane.
 """
 from __future__ import annotations
 
@@ -25,6 +35,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
+from repro.kernels import kv_codec
+from repro.kernels import ops as kops
 from repro.models.linear import dense, init_dense
 from repro.models.layers import apply_rope
 
@@ -156,9 +168,30 @@ def attention_forward(cfg: ModelConfig, p: Dict, x: jax.Array,
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16) -> Dict:
+    """``dtype`` is a jnp dtype, or the string sentinel ``"int8"`` for the
+    quantized cache layout (codes + scales + error-feedback accumulators,
+    module docstring)."""
     kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if isinstance(dtype, str) and dtype == "int8":
+        nb = hd // kv_codec.default_kv_block(hd)
+        return {"k": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+                "k_scale": jnp.zeros((batch, max_len, kv, nb), jnp.float32),
+                "k_err": jnp.zeros((batch, kv, hd), jnp.float32),
+                "v": jnp.zeros((batch, max_len, kv, hd), jnp.int8),
+                "v_scale": jnp.zeros((batch, max_len, kv, nb), jnp.float32),
+                "v_err": jnp.zeros((batch, kv, hd), jnp.float32)}
     return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
             "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+
+
+def kv_cache_quantized(cache: Dict) -> bool:
+    """True for the int8 codes+scales cache layout."""
+    return "k_scale" in cache
+
+
+def kv_cache_block(cache: Dict) -> int:
+    """Codec block size of a quantized cache, recovered from leaf shapes."""
+    return cache["k"].shape[-1] // cache["k_scale"].shape[-1]
 
 
 def attention_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
@@ -197,8 +230,15 @@ def attention_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
         w_cache = cache["k"].shape[1]
         old_kpos = _cache_key_positions(start - 1, w_cache, window)
         old_kpos = jnp.broadcast_to(old_kpos[None], (b, w_cache))
-        k_hist = cache["k"].astype(k.dtype)
-        v_hist = cache["v"].astype(v.dtype)
+        if kv_cache_quantized(cache):
+            blk = kv_cache_block(cache)
+            k_hist = kv_codec.dec_int8_blocks(
+                cache["k"], cache["k_scale"], blk).astype(k.dtype)
+            v_hist = kv_codec.dec_int8_blocks(
+                cache["v"], cache["v_scale"], blk).astype(v.dtype)
+        else:
+            k_hist = cache["k"].astype(k.dtype)
+            v_hist = cache["v"].astype(v.dtype)
         k_all = jnp.concatenate([repeat_kv(k_hist, n_rep),
                                  repeat_kv(k, n_rep)], axis=1)
         v_all = jnp.concatenate([repeat_kv(v_hist, n_rep),
@@ -210,7 +250,38 @@ def attention_prefill(cfg: ModelConfig, p: Dict, x: jax.Array,
     y = dense(p["o"], o.reshape(b, s, -1), f"{name}.o")
 
     w_cache = cache["k"].shape[1]
-    if window > 0 and w_cache < s:
+    if kv_cache_quantized(cache):
+        # quantize then reuse the same three write-branch index ops for the
+        # codes AND scales leaves (same shapes up to the trailing dim). The
+        # error-feedback accumulators stay untouched at prefill — EF is a
+        # decode-append recurrence; prefill writes are one-shot.
+        blk = kv_cache_block(cache)
+        if window > 0 and w_cache < s:
+            ksel, vsel = k[:, -w_cache:], v[:, -w_cache:]
+            idx = positions[:, -w_cache:] % w_cache              # (B, W)
+        elif window > 0 and start is not None:
+            ksel, vsel = k, v
+            idx = positions % w_cache                            # (B, S)
+        else:
+            ksel, vsel, idx = k, v, None
+        kq, ksc = kv_codec.enc_int8_blocks(ksel, blk)
+        vq, vsc = kv_codec.enc_int8_blocks(vsel, blk)
+        if idx is not None:
+            bidx = jnp.arange(b)[:, None]
+            cache = dict(cache,
+                         k=cache["k"].at[bidx, idx].set(kq),
+                         k_scale=cache["k_scale"].at[bidx, idx].set(ksc),
+                         v=cache["v"].at[bidx, idx].set(vq),
+                         v_scale=cache["v_scale"].at[bidx, idx].set(vsc))
+        else:
+            off = 0 if start is None else start
+            upd = jax.lax.dynamic_update_slice
+            cache = dict(cache,
+                         k=upd(cache["k"], kq, (0, off, 0, 0)),
+                         k_scale=upd(cache["k_scale"], ksc, (0, off, 0, 0)),
+                         v=upd(cache["v"], vq, (0, off, 0, 0)),
+                         v_scale=upd(cache["v_scale"], vsc, (0, off, 0, 0)))
+    elif window > 0 and w_cache < s:
         # ring buffer: keep the last W entries, aligned to pos % W
         idx = positions[:, -w_cache:] % w_cache                  # (B, W)
         ksel = k[:, -w_cache:].astype(cache["k"].dtype)
@@ -271,8 +342,30 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
     cache_len = cache["k"].shape[1]
     slot = (pos % cache_len) if window > 0 else pos
     bidx = jnp.arange(b)
-    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    quantized = kv_cache_quantized(cache)
+    if quantized:
+        # error-bounded append: fold the lane's accumulated quantization
+        # error into the new K/V row before encoding, then keep the fresh
+        # residual — e ← x − dec(enc(x + e)) (Karimireddy et al., the wire
+        # codec's recurrence applied per lane; cache eviction zeroes the
+        # lane and the accumulator with it)
+        blk = kv_cache_block(cache)
+        kf = k[:, 0].astype(jnp.float32) + cache["k_err"]
+        vf = v[:, 0].astype(jnp.float32) + cache["v_err"]
+        kq, ksc = kv_codec.enc_int8_blocks(kf, blk)
+        vq, vsc = kv_codec.enc_int8_blocks(vf, blk)
+        ck = cache["k"].at[bidx, slot].set(kq)
+        cks = cache["k_scale"].at[bidx, slot].set(ksc)
+        cv = cache["v"].at[bidx, slot].set(vq)
+        cvs = cache["v_scale"].at[bidx, slot].set(vsc)
+        new_cache = {"k": ck, "k_scale": cks,
+                     "k_err": kf - kv_codec.dec_int8_blocks(kq, ksc, blk),
+                     "v": cv, "v_scale": cvs,
+                     "v_err": vf - kv_codec.dec_int8_blocks(vq, vsc, blk)}
+    else:
+        ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
 
     # key positions for masking
     if window > 0:
@@ -287,7 +380,18 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
         kpos = jnp.arange(cache_len)[None, :].repeat(b, 0)
         kpos = jnp.where(kpos <= pos[:, None], kpos, -1)
 
-    if cfg.opt_attention:
+    if quantized:
+        # fused dequant-attention: int8 history never materializes as a
+        # full fp16/f32 tensor in HBM on the pallas path; the dispatcher
+        # (impl = serve.kv_impl via ops.kv_attn_default_impl) falls back to
+        # the full-dequant XLA oracle off-TPU / over VMEM budget.
+        n_rep = h // kv
+        qg = (q[:, 0] * hd ** -0.5).reshape(b, kv, n_rep, hd)
+        o = kops.int8_kv_attention(qg, ck, cks, cv, cvs, kpos,
+                                   kv_block=blk,
+                                   softcap=cfg.attn_logits_softcap)
+        o = o.astype(x.dtype)
+    elif cfg.opt_attention:
         # grouped-query attention against the cache WITHOUT materializing an
         # f32 copy of the cache or the head-repeated expansion: the einsum
         # contracts bf16 cache entries directly with f32 accumulation. (The
@@ -314,7 +418,7 @@ def attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array,
         pw = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhs,bshd->bhd", pw, vv).astype(x.dtype)
     y = dense(p["o"], o.reshape(b, 1, h * hd), f"{name}.o")
-    return y, {"k": ck, "v": cv}
+    return y, new_cache
 
 
 # ---------------------------------------------------------------------------

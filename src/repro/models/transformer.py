@@ -168,20 +168,32 @@ def layer_forward(cfg: ModelConfig, spec: LayerSpec, p: Dict, h: jax.Array,
     return h, aux
 
 
+def _float_cache_dtype(dtype):
+    """Resolve the ``"int8"`` sentinel to bf16 for cache kinds that stay in
+    float: MLA latents (already the compressed-memory form), recurrent
+    states, and enc-dec cross-KV (computed once, not append-quantized)."""
+    return jnp.bfloat16 if isinstance(dtype, str) and dtype == "int8" \
+        else dtype
+
+
 def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
                      max_len: int, dtype=jnp.bfloat16) -> Any:
+    """``dtype`` may be the string sentinel ``"int8"``: GQA full/ring
+    self-attention caches then store int8 codes + f32 scales + error
+    accumulators (attention.init_kv_cache); other cache kinds keep bf16."""
     mixer, _ = spec
     if mixer == "mla":
-        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+        return attn.init_mla_cache(cfg, batch, max_len,
+                                   _float_cache_dtype(dtype))
     if mixer in ("attn",):
         return attn.init_kv_cache(cfg, batch, max_len, dtype)
     if mixer in ("swa", "local"):
         w = min(cfg.window_size, max_len)
         return attn.init_kv_cache(cfg, batch, w, dtype)
     if mixer == "rglru":
-        return rec.init_rglru_state(cfg, batch, dtype)
+        return rec.init_rglru_state(cfg, batch, _float_cache_dtype(dtype))
     if mixer == "mamba":
-        return rec.init_mamba_state(cfg, batch, dtype)
+        return rec.init_mamba_state(cfg, batch, _float_cache_dtype(dtype))
     raise ValueError(mixer)
 
 
@@ -674,6 +686,8 @@ def encdec_prefill(cfg: ModelConfig, params: Dict, frames: jax.Array,
     h = h + sinusoidal_positions(s, cfg.d_model)[None].astype(dtype)
     positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
 
+    cross_dtype = _float_cache_dtype(cache_dtype)
+
     def one(h, p):
         lp = p["layer"]
         self_cache = attn.init_kv_cache(cfg, b, max_len, cache_dtype)
@@ -688,7 +702,7 @@ def encdec_prefill(cfg: ModelConfig, params: Dict, frames: jax.Array,
         h = h + mlp(cfg, lp["mlp"], hn, name="layer.mlp")
         return h, {"self": self_cache,
                    "cross": jax.tree_util.tree_map(
-                       lambda a: a.astype(cache_dtype), kv)}
+                       lambda a: a.astype(cross_dtype), kv)}
 
     caches = []
     if unroll_eager:
@@ -716,11 +730,13 @@ def encdec_prefill_begin(cfg: ModelConfig, params: Dict, frames: jax.Array,
     h = embed(params["embed"], tokens, dtype)
     h = h + sinusoidal_positions(s, cfg.d_model)[None].astype(dtype)
 
+    cross_dtype = _float_cache_dtype(cache_dtype)
+
     def mk_cache(_, p):
         kv = attn.cross_attention_kv(cfg, p["xattn"], enc, "xattn")
         return 0, {"self": attn.init_kv_cache(cfg, b, max_len, cache_dtype),
                    "cross": jax.tree_util.tree_map(
-                       lambda a: a.astype(cache_dtype), kv)}
+                       lambda a: a.astype(cross_dtype), kv)}
 
     if unroll_eager:
         n = jax.tree_util.tree_leaves(params["decoder"]["layers"])[0].shape[0]

@@ -96,6 +96,13 @@ def serve_step(cfg: Config, params: Any, token: jax.Array, pos: jax.Array,
     return T.decode_step(cfg.model, params, token, pos, caches)
 
 
+def cache_dtype(cfg: Config):
+    """Decode-cache precision from ``serve.kv_cache``: the ``"int8"``
+    string sentinel (quantized codes+scales leaves, models/attention.py)
+    or bf16."""
+    return "int8" if cfg.serve.kv_cache == "int8" else jnp.bfloat16
+
+
 def prefill(cfg: Config, params: Any, batch: Dict[str, jax.Array],
             max_len: int) -> Tuple[jax.Array, Any]:
     """Prefill from a batch dict ({tokens, embeds?/frames?}).
@@ -105,18 +112,20 @@ def prefill(cfg: Config, params: Any, batch: Dict[str, jax.Array],
     with decode); logits/caches match single-shot prefill.
     """
     chunk = cfg.serve.prefill_chunk
+    cdt = cache_dtype(cfg)
     if cfg.model.is_encoder_decoder:
         if chunk > 0:
             return T.encdec_prefill_chunked(cfg.model, params,
                                             batch["frames"], batch["tokens"],
-                                            max_len, chunk)
+                                            max_len, chunk, cache_dtype=cdt)
         return T.encdec_prefill(cfg.model, params, batch["frames"],
-                                batch["tokens"], max_len)
+                                batch["tokens"], max_len, cache_dtype=cdt)
     if chunk > 0:
         return T.prefill_chunked(cfg.model, params, batch["tokens"], max_len,
-                                 chunk, embeds=batch.get("embeds"))
+                                 chunk, embeds=batch.get("embeds"),
+                                 cache_dtype=cdt)
     return T.prefill(cfg.model, params, batch["tokens"], max_len,
-                     embeds=batch.get("embeds"))
+                     embeds=batch.get("embeds"), cache_dtype=cdt)
 
 
 def prefill_begin(cfg: Config, params: Any, batch: Dict[str, jax.Array],
@@ -124,11 +133,13 @@ def prefill_begin(cfg: Config, params: Any, batch: Dict[str, jax.Array],
     """Incremental prefill setup (continuous batching): returns the full
     embedded input ``h`` and empty caches; feed ``h`` slices through
     :func:`prefill_step` one chunk at a time."""
+    cdt = cache_dtype(cfg)
     if cfg.model.is_encoder_decoder:
         return T.encdec_prefill_begin(cfg.model, params, batch["frames"],
-                                      batch["tokens"], max_len)
+                                      batch["tokens"], max_len,
+                                      cache_dtype=cdt)
     return T.prefill_begin(cfg.model, params, batch["tokens"], max_len,
-                           embeds=batch.get("embeds"))
+                           embeds=batch.get("embeds"), cache_dtype=cdt)
 
 
 def prefill_step(cfg: Config, params: Any, h_chunk: jax.Array, start: int,
@@ -160,23 +171,26 @@ def generate(cfg: Config, params: Any, batch: Dict[str, jax.Array], *,
              seed: int = 0) -> GenResult:
     """Greedy/temperature generation. Static shapes; jit-compiled loop.
 
-    A kernel fault on the pallas w4a16 path degrades this call to the xla
-    reference backend and retries once — counted in ``engine_stats()``,
-    never silent.
+    A kernel fault on a pallas path (w4a16 matmul or the fused int8-KV
+    attention) degrades this call to the xla reference backends and retries
+    once — counted in ``engine_stats()``, never silent.
     """
     impl = cfg.serve.w4a16_impl
+    kv_impl = cfg.serve.kv_impl
     try:
-        with kops.w4a16_default_impl(impl):
+        with kops.w4a16_default_impl(impl), \
+                kops.kv_attn_default_impl(kv_impl):
             return _generate(cfg, params, batch,
                              max_new_tokens=max_new_tokens, eos_id=eos_id,
                              temperature=temperature, seed=seed)
     except Exception as e:                      # noqa: BLE001 — classified
-        if impl == "xla" or not _kernel_fault(e):
+        if (impl == "xla" and kv_impl == "xla") or not _kernel_fault(e):
             raise
         _ENGINE_STATS["kernel_degradations"] += 1
-        warnings.warn(f"w4a16 kernel fault ({e!r}): degrading generate() "
+        warnings.warn(f"kernel fault ({e!r}): degrading generate() "
                       "to impl='xla'", RuntimeWarning, stacklevel=2)
-        with kops.w4a16_default_impl("xla"):
+        with kops.w4a16_default_impl("xla"), \
+                kops.kv_attn_default_impl("xla"):
             return _generate(cfg, params, batch,
                              max_new_tokens=max_new_tokens, eos_id=eos_id,
                              temperature=temperature, seed=seed)

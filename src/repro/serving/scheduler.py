@@ -123,6 +123,7 @@ class ContinuousEngine:
         # timeouts on its virtual-time axis (benchmarks/serving_bench.py)
         self.clock = clock or time.monotonic
         self._impl = cfg.serve.w4a16_impl
+        self._kv_impl = cfg.serve.kv_impl
         self._next_rid = 0
         self._queue: deque = deque()
         self._prefill: Optional[_Prefill] = None
@@ -171,22 +172,27 @@ class ContinuousEngine:
                                                         cfg))
 
     def _guarded(self, name: str, *args):
-        """Run one jitted piece under the current w4a16 backend; on a kernel
-        fault, degrade pallas→xla (rebuild jits, count, warn) and retry the
-        same call once. Already-xla faults and non-kernel faults propagate."""
-        with kops.w4a16_default_impl(self._impl):
+        """Run one jitted piece under the current kernel backends (w4a16
+        matmul + int8-KV attention); on a kernel fault, degrade pallas→xla
+        (rebuild jits, count, warn) and retry the same call once.
+        Already-xla faults and non-kernel faults propagate."""
+        with kops.w4a16_default_impl(self._impl), \
+                kops.kv_attn_default_impl(self._kv_impl):
             try:
                 return getattr(self, name)(*args)
             except Exception as e:          # noqa: BLE001 — classified below
-                if self._impl == "xla" or not E._kernel_fault(e):
+                if (self._impl == "xla" and self._kv_impl == "xla") \
+                        or not E._kernel_fault(e):
                     raise
                 self.stats["kernel_degradations"] += 1
                 warnings.warn(
-                    f"w4a16 kernel fault in {name} ({e!r}): degrading "
+                    f"kernel fault in {name} ({e!r}): degrading "
                     "engine to impl='xla'", RuntimeWarning, stacklevel=2)
         self._impl = "xla"
+        self._kv_impl = "xla"
         self._build_jit()
-        with kops.w4a16_default_impl("xla"):
+        with kops.w4a16_default_impl("xla"), \
+                kops.kv_attn_default_impl("xla"):
             return getattr(self, name)(*args)
 
     def engine_stats(self) -> Dict[str, Any]:
@@ -195,6 +201,7 @@ class ContinuousEngine:
         assert on."""
         s: Dict[str, Any] = dict(self.stats)
         s["w4a16_impl"] = self._impl
+        s["kv_impl"] = self._kv_impl
         s["kernel_fallbacks"] = kops.fallback_stats()
         return s
 

@@ -1,0 +1,390 @@
+"""Int8 KV cache (serve.kv_cache knob): positions oracle, long-context
+drift regression, bitwise slot/checkpoint round-trips, fused-kernel parity,
+fault-plane degradation, continuous-engine parity.
+
+The drift contract the serving path promises (docs/SERVING.md): greedy
+decode under the quantized cache is token-identical to the bf16 cache over
+a pinned horizon at smoke scale, and per-step logit drift stays bounded —
+the error-feedback accumulator keeps it from growing with depth.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_shim import given, settings, st
+
+from repro.configs import get_config
+from repro.core import faults
+from repro.data import MarkovLM
+from repro.models import attention as attn
+from repro.models import transformer as T
+from repro.serving import engine as E
+from repro.serving.engine import generate
+from repro.serving.scheduler import ContinuousEngine
+
+
+def _with_serve(cfg, **kw):
+    return dataclasses.replace(cfg, serve=dataclasses.replace(cfg.serve,
+                                                              **kw))
+
+
+def _decoder_setup(arch="opt-proxy", b=3, s=8):
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+    batch = MarkovLM(cfg.model.vocab_size, seed=0).batch(b, s)
+    return cfg, params, batch
+
+
+def _encdec_setup(b=2, s=6):
+    cfg = get_config("whisper-large-v3", smoke=True)
+    params = T.init_encdec_params(cfg.model, jax.random.PRNGKey(1))
+    frames = jax.random.normal(
+        jax.random.PRNGKey(2),
+        (b, cfg.model.encoder_seq_len, cfg.model.d_model), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                              cfg.model.vocab_size)
+    return cfg, params, {"frames": frames, "tokens": toks}
+
+
+# ---------------------------------------------------------------------------
+# _cache_key_positions vs an independent simulation oracle
+# ---------------------------------------------------------------------------
+
+def _positions_oracle(last, cache_len, window):
+    """Independent restatement of the slot contract. Full cache: slot i
+    holds position i (it never wraps — cache_len covers every position),
+    valid while i <= last. Ring: replay the writes (position p lands in
+    slot p % cache_len, later writes win), then invalidate slots outside
+    the window."""
+    if window == 0:
+        return np.asarray([i if i <= last else -1
+                           for i in range(cache_len)], np.int32)
+    slots = [-1] * cache_len
+    for p in range(0, last + 1):
+        slots[p % cache_len] = p
+    lo = last - min(window, cache_len)
+    return np.asarray([p if p >= 0 and p > lo else -1 for p in slots],
+                      np.int32)
+
+
+class TestCacheKeyPositions:
+    @settings(max_examples=60, deadline=None)
+    @given(last=st.integers(min_value=-1, max_value=21),
+           cache_len=st.integers(min_value=1, max_value=9),
+           window=st.sampled_from([0, 2, 5, 16]))
+    def test_matches_oracle(self, last, cache_len, window):
+        got = np.asarray(attn._cache_key_positions(last, cache_len, window))
+        np.testing.assert_array_equal(
+            got, _positions_oracle(last, cache_len, window))
+
+    def test_empty_cache_all_invalid(self):
+        np.testing.assert_array_equal(
+            np.asarray(attn._cache_key_positions(-1, 6, 4)), -1)
+        np.testing.assert_array_equal(
+            np.asarray(attn._cache_key_positions(-1, 6, 0)), -1)
+
+    def test_ring_smaller_than_window(self):
+        # w_cache < window: every written slot in the last cache_len
+        # positions is valid (the ring can't hold more history than that)
+        got = np.asarray(attn._cache_key_positions(10, 4, 16))
+        np.testing.assert_array_equal(got, _positions_oracle(10, 4, 16))
+        assert (got >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# drift regression: int8 vs bf16 cache, greedy decode
+# ---------------------------------------------------------------------------
+
+class TestDriftRegression:
+    PIN_HORIZON = 8          # greedy tokens must match exactly this far
+    LOGIT_DRIFT_BOUND = 0.25  # ~5x measured at smoke scale (~0.05)
+
+    def test_decoder_token_identical_pinned_horizon(self):
+        cfg, params, batch = _decoder_setup()
+        r_fp = generate(cfg, params, batch,
+                        max_new_tokens=self.PIN_HORIZON, temperature=0.0)
+        r_q = generate(_with_serve(cfg, kv_cache="int8"), params, batch,
+                       max_new_tokens=self.PIN_HORIZON, temperature=0.0)
+        np.testing.assert_array_equal(np.asarray(r_fp.tokens),
+                                      np.asarray(r_q.tokens))
+
+    def test_encdec_token_identical_pinned_horizon(self):
+        cfg, params, batch = _encdec_setup()
+        r_fp = generate(cfg, params, batch,
+                        max_new_tokens=self.PIN_HORIZON, temperature=0.0)
+        r_q = generate(_with_serve(cfg, kv_cache="int8"), params, batch,
+                       max_new_tokens=self.PIN_HORIZON, temperature=0.0)
+        np.testing.assert_array_equal(np.asarray(r_fp.tokens),
+                                      np.asarray(r_q.tokens))
+
+    def test_logit_drift_bounded_beyond_horizon(self):
+        """Feed both caches the SAME (bf16-chosen) token stream and bound
+        the per-step logit gap — divergence, not agreement, is what the
+        error-feedback accumulator is there to stop."""
+        cfg, params, batch = _decoder_setup()
+        mc = cfg.model
+        toks = batch["tokens"]
+        b, s0 = toks.shape
+        max_len = s0 + 14
+        lg_f, c_f = T.prefill(mc, params, toks, max_len)
+        _, c_q = T.prefill(mc, params, toks, max_len, cache_dtype="int8")
+        tok = jnp.argmax(lg_f, -1).astype(jnp.int32)
+        pos = jnp.full((b,), s0, jnp.int32)
+        deltas = []
+        for _ in range(12):
+            lf, c_f = T.decode_step(mc, params, tok, pos, c_f)
+            lq, c_q = T.decode_step(mc, params, tok, pos, c_q)
+            deltas.append(float(jnp.max(jnp.abs(lf - lq))))
+            tok = jnp.argmax(lf, -1).astype(jnp.int32)
+            pos = pos + 1
+        assert max(deltas) <= self.LOGIT_DRIFT_BOUND, deltas
+        # non-accumulation: the late-half drift is not ballooning past the
+        # early half (generous 3x — this guards blowup, not noise)
+        early = max(deltas[:6])
+        late = max(deltas[6:])
+        assert late <= 3 * early + 0.05, deltas
+
+    def test_prefill_logits_unaffected(self):
+        """Prefill attends to the fresh fp K/V, not the cache — the int8
+        knob must not move prefill logits at all."""
+        cfg, params, batch = _decoder_setup()
+        mc = cfg.model
+        lg_f, _ = T.prefill(mc, params, batch["tokens"], 24)
+        lg_q, _ = T.prefill(mc, params, batch["tokens"], 24,
+                            cache_dtype="int8")
+        np.testing.assert_array_equal(np.asarray(lg_f), np.asarray(lg_q))
+
+    def test_chunked_prefill_matches_single_shot(self):
+        cfg, params, batch = _decoder_setup()
+        base = _with_serve(cfg, kv_cache="int8")
+        r1 = generate(base, params, batch, max_new_tokens=6,
+                      temperature=0.0)
+        r2 = generate(_with_serve(base, prefill_chunk=3), params, batch,
+                      max_new_tokens=6, temperature=0.0)
+        np.testing.assert_array_equal(np.asarray(r1.tokens),
+                                      np.asarray(r2.tokens))
+
+
+# ---------------------------------------------------------------------------
+# bitwise slot + checkpoint round-trips of quantized leaves
+# ---------------------------------------------------------------------------
+
+def _leaf_pairs(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return zip(la, lb)
+
+
+class TestQuantizedSlotRoundTrip:
+    def _prefill_cache(self):
+        cfg, params, batch = _decoder_setup(b=1)
+        _, caches = T.prefill(cfg.model, params, batch["tokens"], 16,
+                              cache_dtype="int8")
+        return caches
+
+    def test_cache_has_quantized_leaves(self):
+        caches = self._prefill_cache()
+        dtypes = {jnp.dtype(l.dtype)
+                  for l in jax.tree_util.tree_leaves(caches)}
+        assert jnp.dtype("int8") in dtypes
+
+    def test_insert_is_bitwise(self):
+        src = self._prefill_cache()
+        slotted = T.cache_slots_like(src, 4)
+        slotted = T.cache_slot_insert(slotted, src, jnp.int32(2))
+        for big, small in _leaf_pairs(slotted, src):
+            np.testing.assert_array_equal(np.asarray(big[:, 2]),
+                                          np.asarray(small[:, 0]))
+            # untouched lanes stay zero — incl. int8 codes and EF leaves
+            assert not np.any(np.asarray(big[:, 0]))
+
+    def test_evict_zeroes_lane_and_error_feedback(self):
+        src = self._prefill_cache()
+        slotted = T.cache_slots_like(src, 3)
+        slotted = T.cache_slot_insert(slotted, src, jnp.int32(1))
+        evicted = T.cache_slot_evict(slotted, jnp.int32(1))
+        for leaf in jax.tree_util.tree_leaves(evicted):
+            assert not np.any(np.asarray(leaf[:, 1]))
+
+    def test_insert_evict_insert_roundtrip(self):
+        src = self._prefill_cache()
+        slotted = T.cache_slots_like(src, 2)
+        slotted = T.cache_slot_insert(slotted, src, jnp.int32(0))
+        slotted = T.cache_slot_evict(slotted, jnp.int32(0))
+        slotted = T.cache_slot_insert(slotted, src, jnp.int32(0))
+        for big, small in _leaf_pairs(slotted, src):
+            np.testing.assert_array_equal(np.asarray(big[:, 0]),
+                                          np.asarray(small[:, 0]))
+
+    def test_checkpointer_roundtrip_bitwise(self, tmp_path):
+        from repro.distributed.checkpoint import Checkpointer
+        caches = self._prefill_cache()
+        ck = Checkpointer(str(tmp_path), async_write=False)
+        ck.save(0, caches)
+        ck.wait()
+        restored, _ = ck.restore(caches)
+        for a, b in _leaf_pairs(caches, restored):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fused kernel: pallas (interpret off-TPU) vs xla reference parity
+# ---------------------------------------------------------------------------
+
+class TestFusedKernelParity:
+    @pytest.mark.parametrize("b,s,kv,r,hd,blk", [
+        (2, 16, 2, 4, 64, 64),       # decode shape, small history
+        (1, 130, 1, 8, 64, 32),      # history spans >1 s-tile after padding
+        (2, 32, 4, 1, 128, 128),     # MQA-per-group (r=1)
+        (1, 24, 2, 3, 64, 64),       # ragged r (padded to 8 inside)
+    ])
+    def test_pallas_matches_xla(self, b, s, kv, r, hd, blk):
+        from repro.kernels import kv_codec, ops as kops
+        rng = np.random.default_rng(b * 100 + s)
+        k = rng.normal(size=(b, s, kv, hd)).astype(np.float32)
+        v = rng.normal(size=(b, s, kv, hd)).astype(np.float32)
+        kc, ks = kv_codec.enc_int8_blocks(jnp.asarray(k), blk)
+        vc, vs = kv_codec.enc_int8_blocks(jnp.asarray(v), blk)
+        q = jnp.asarray(rng.normal(size=(b, kv, r, hd)).astype(np.float32))
+        kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+        kpos = jnp.where(kpos < s - 3, kpos, -1)      # some invalid slots
+        args = (q, kc, ks, vc, vs, kpos)
+        o_x = kops.int8_kv_attention(*args, kv_block=blk, impl="xla")
+        o_p = kops.int8_kv_attention(*args, kv_block=blk, impl="pallas")
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_softcap_parity(self):
+        from repro.kernels import kv_codec, ops as kops
+        rng = np.random.default_rng(7)
+        b, s, kv, r, hd, blk = 1, 16, 2, 4, 64, 64
+        kc, ks = kv_codec.enc_int8_blocks(
+            jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32)),
+            blk)
+        vc, vs = kv_codec.enc_int8_blocks(
+            jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32)),
+            blk)
+        q = jnp.asarray(rng.normal(size=(b, kv, r, hd)).astype(np.float32))
+        kpos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+        o_x = kops.int8_kv_attention(q, kc, ks, vc, vs, kpos, kv_block=blk,
+                                     softcap=8.0, impl="xla")
+        o_p = kops.int8_kv_attention(q, kc, ks, vc, vs, kpos, kv_block=blk,
+                                     softcap=8.0, impl="pallas")
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_all_invalid_tile_is_safe(self):
+        """A fully-masked s-tile must not poison the online softmax."""
+        from repro.kernels import kv_codec, ops as kops
+        rng = np.random.default_rng(11)
+        b, s, kv, r, hd, blk = 1, 140, 1, 4, 64, 64
+        kc, ks = kv_codec.enc_int8_blocks(
+            jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32)),
+            blk)
+        vc, vs = kv_codec.enc_int8_blocks(
+            jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32)),
+            blk)
+        q = jnp.asarray(rng.normal(size=(b, kv, r, hd)).astype(np.float32))
+        kpos = jnp.where(jnp.arange(s)[None] < 5,
+                         jnp.arange(s)[None], -1).astype(jnp.int32)
+        kpos = jnp.broadcast_to(kpos, (b, s))
+        o_x = kops.int8_kv_attention(q, kc, ks, vc, vs, kpos, kv_block=blk,
+                                     impl="xla")
+        o_p = kops.int8_kv_attention(q, kc, ks, vc, vs, kpos, kv_block=blk,
+                                     impl="pallas")
+        assert np.all(np.isfinite(np.asarray(o_p)))
+        np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_x),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: impl knob, fault degradation, continuous parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.serving
+class TestInt8Serving:
+    def test_kv_impl_knob_deterministic(self):
+        cfg, params, batch = _decoder_setup()
+        outs = {}
+        for impl in ("auto", "xla", "pallas"):
+            r = generate(_with_serve(cfg, kv_cache="int8", kv_impl=impl),
+                         params, batch, max_new_tokens=4, temperature=0.0)
+            outs[impl] = np.asarray(r.tokens)
+        np.testing.assert_array_equal(outs["auto"], outs["xla"])
+        np.testing.assert_array_equal(outs["xla"], outs["pallas"])
+
+    def test_generate_degrades_on_kernel_fault(self):
+        cfg, params, batch = _decoder_setup()
+        cfg8 = _with_serve(cfg, kv_cache="int8", kv_impl="pallas")
+        clean = generate(_with_serve(cfg, kv_cache="int8"), params, batch,
+                         max_new_tokens=4, temperature=0.0)
+        before = E.engine_stats()["kernel_degradations"]
+        with faults.inject("kernels.pallas_dispatch@1"):
+            with pytest.warns(RuntimeWarning, match="degrading"):
+                r = generate(cfg8, params, batch, max_new_tokens=4,
+                             temperature=0.0)
+        assert E.engine_stats()["kernel_degradations"] == before + 1
+        np.testing.assert_array_equal(np.asarray(r.tokens),
+                                      np.asarray(clean.tokens))
+
+    def test_continuous_engine_degrades_and_reports(self):
+        cfg, params, batch = _decoder_setup()
+        cfg8 = _with_serve(cfg, kv_cache="int8", kv_impl="pallas",
+                           max_batch=2)
+        eng = ContinuousEngine(cfg8, params, max_len=32)
+        with faults.inject("kernels.pallas_dispatch@1"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", RuntimeWarning)
+                rids = [eng.submit({"tokens": batch["tokens"][i:i + 1]},
+                                   max_new_tokens=4) for i in range(2)]
+                done = eng.run()
+        stats = eng.engine_stats()
+        assert stats["kernel_degradations"] == 1
+        assert stats["kv_impl"] == "xla"
+        ref = generate(_with_serve(cfg, kv_cache="int8"), params, batch,
+                       max_new_tokens=4, temperature=0.0)
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(done[rid].tokens,
+                                          np.asarray(ref.tokens[i]))
+
+    def test_continuous_matches_static_int8(self):
+        cfg, params, batch = _decoder_setup()
+        cfg8 = _with_serve(cfg, kv_cache="int8", max_batch=2,
+                           prefill_chunk=4)
+        ref = generate(_with_serve(cfg, kv_cache="int8"), params, batch,
+                       max_new_tokens=6, temperature=0.0)
+        eng = ContinuousEngine(cfg8, params, max_len=32)
+        rids = [eng.submit({"tokens": batch["tokens"][i:i + 1]},
+                           max_new_tokens=6) for i in range(3)]
+        done = eng.run()
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(done[rid].tokens,
+                                          np.asarray(ref.tokens[i]))
+
+    def test_nan_quarantine_works_on_quantized_lanes(self):
+        """Lane poisoning NaN-fills only float leaves (scales + error
+        feedback — int8 codes can't hold NaN); dequant multiplies codes by
+        scales, so the poisoned lane's logits still go non-finite and the
+        quarantine guard catches it exactly as with the fp16 cache
+        (docs/SERVING.md §Failure handling)."""
+        cfg, params, batch = _decoder_setup(b=2)
+        cfg8 = _with_serve(cfg, kv_cache="int8", max_batch=2)
+        eng = ContinuousEngine(cfg8, params, max_len=32)
+        rids = [eng.submit({"tokens": batch["tokens"][i:i + 1]},
+                           max_new_tokens=6) for i in range(2)]
+        with faults.inject("serve.decode_step@2"):
+            done = eng.run()
+        assert eng.stats["quarantined"] == 1
+        assert "quarantined" in {done[r].status for r in rids}
+
+    def test_stats_expose_kv_impl(self):
+        cfg, params, _ = _decoder_setup()
+        eng = ContinuousEngine(cfg, params, max_len=32)
+        s = eng.engine_stats()
+        assert "kv_impl" in s and "w4a16_impl" in s

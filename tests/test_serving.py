@@ -163,6 +163,7 @@ class TestChunkedPrefill:
                                       np.asarray(r.tokens))
 
 
+@pytest.mark.serving
 class TestContinuousScheduler:
     """ContinuousEngine greedy == static generate per sequence."""
 
@@ -234,6 +235,7 @@ class TestContinuousScheduler:
                                           np.asarray(ref.tokens[i]))
 
 
+@pytest.mark.serving
 class TestQuantizedDecodePath:
     """generate() with QuantizedTensor params routes every decode dense
     through ops.w4a16_matmul on decode shapes, deterministic across impls."""
