@@ -38,6 +38,7 @@ not bytes in the abstract).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List
@@ -47,10 +48,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_config, cache_bytes_per_seq
+from repro.core import faults
 from repro.core.pipeline import pack_for_serving
 from repro.models import transformer as T
 from repro.serving.engine import generate
 from repro.serving.scheduler import ContinuousEngine, QueueFullError
+from repro.serving.supervisor import SupervisedEngine
 
 
 def _make_requests(cfg, n: int, rng: np.random.Generator, tiny: bool):
@@ -145,14 +148,18 @@ def _run_static(cfg, params, reqs, arrivals) -> Dict[str, float]:
             "occupancy": lane_steps_useful / lane_steps_total}
 
 
-def _run_continuous(cfg, params, reqs, arrivals, max_len: int
+def _run_continuous(cfg, params, reqs, arrivals, max_len: int,
+                    supervise: bool = False, arm: str | None = None
                     ) -> Dict[str, float]:
     # the engine's deadline machinery runs off the same virtual clock the
     # replay advances, so request_timeout_s measures virtual (trace) time —
-    # the overload rows shed load exactly as a wall-clock deployment would
+    # the overload rows shed load exactly as a wall-clock deployment would.
+    # supervise=True routes the trace through the crash-recovering
+    # supervisor; `arm` (e.g. "serve.engine_step@K") injects faults over
+    # the measured loop only (warmup ticks never consume schedule hits)
     clockbox = [0.0]
-    eng = ContinuousEngine(cfg, params, max_len=max_len,
-                           clock=lambda: clockbox[0])
+    mk = SupervisedEngine if supervise else ContinuousEngine
+    eng = mk(cfg, params, max_len=max_len, clock=lambda: clockbox[0])
     # warmup: one request per distinct prompt length compiles every jitted
     # shape on the trace (prefill begin/step/finish, decode, insert, evict)
     seen = set()
@@ -170,54 +177,63 @@ def _run_continuous(cfg, params, reqs, arrivals, max_len: int
     rid_of: Dict[int, int] = {}
     steps_of: Dict[int, int] = {}
     status_of: Dict[int, str] = {}
-    lane_steps = decode_ticks = 0
+    tokens_of: Dict[int, np.ndarray] = {}
+    lane_steps = decode_ticks = ticks = 0
     n = len(reqs)
     finished = rejected = 0
-    while finished + rejected < n:
-        while next_req < n and arrivals[next_req] <= t:
-            try:
-                rid = eng.submit(reqs[next_req]["batch"],
-                                 max_new_tokens=reqs[next_req]["max_new"])
-                rid_of[rid] = next_req
-            except QueueFullError:
-                rejected += 1       # counted in eng.stats["rejections"] too
-            next_req += 1
-        if eng.idle and next_req < n:
-            t = float(arrivals[next_req])       # idle: jump to next arrival
+    armed = faults.inject(arm) if arm else contextlib.nullcontext()
+    with armed:
+        while finished + rejected < n:
+            while next_req < n and arrivals[next_req] <= t:
+                try:
+                    rid = eng.submit(
+                        reqs[next_req]["batch"],
+                        max_new_tokens=reqs[next_req]["max_new"])
+                    rid_of[rid] = next_req
+                except QueueFullError:
+                    rejected += 1   # counted in eng.stats["rejections"] too
+                next_req += 1
+            if eng.idle and next_req < n:
+                t = float(arrivals[next_req])   # idle: jump to next arrival
+                clockbox[0] = t
+                continue
+            t0 = time.perf_counter()
+            rep = eng.step()
+            dt = time.perf_counter() - t0
+            busy += dt
+            t += dt
             clockbox[0] = t
-            continue
-        t0 = time.perf_counter()
-        rep = eng.step()
-        dt = time.perf_counter() - t0
-        busy += dt
-        t += dt
-        clockbox[0] = t
-        # decode participation this tick, from the report: every lane
-        # active at the decode step emits exactly one token unless it hit
-        # eos (eos never fires on bench traces) — pre-tick `active` would
-        # undercount lanes the deficit-driven prefill inserted mid-tick
-        if rep.decoded:
-            decode_ticks += 1
-            lane_steps += len(rep.decoded)
-        for rid, _ in rep.first_tokens:
-            if rid in rid_of:
-                first_t[rid] = last_t[rid] = t
-        for rid, _ in rep.decoded:
-            if rid in rid_of:
-                last_t[rid] = t
-        for f in rep.finished:
-            if f.rid in rid_of:
-                steps_of[f.rid] = f.steps
-                status_of[f.rid] = f.status
-                finished += 1
+            ticks += 1
+            # decode participation this tick, from the report: every lane
+            # active at the decode step emits exactly one token unless it
+            # hit eos (eos never fires on bench traces) — pre-tick `active`
+            # would undercount lanes the deficit-driven prefill inserted
+            # mid-tick
+            if rep.decoded:
+                decode_ticks += 1
+                lane_steps += len(rep.decoded)
+            for rid, _ in rep.first_tokens:
+                if rid in rid_of:
+                    first_t[rid] = last_t[rid] = t
+            for rid, _ in rep.decoded:
+                if rid in rid_of:
+                    last_t[rid] = t
+            for f in rep.finished:
+                if f.rid in rid_of:
+                    steps_of[f.rid] = f.steps
+                    status_of[f.rid] = f.status
+                    tokens_of[rid_of[f.rid]] = np.asarray(f.tokens)
+                    finished += 1
     ttft = [first_t[r] - float(arrivals[rid_of[r]]) for r in first_t]
     tpot = [(last_t[r] - first_t[r]) / (steps_of[r] - 1)
             for r in first_t if steps_of.get(r, 0) > 1]
     return {"tokens_total": int(sum(steps_of.values())), "busy_s": busy,
-            "ttft": ttft, "tpot": tpot,
+            "ttft": ttft, "tpot": tpot, "ticks": ticks,
+            "tokens_of": tokens_of,
             "occupancy": lane_steps / max(1, decode_ticks * eng.lanes),
             "completed": sum(1 for s in status_of.values() if s == "ok"),
-            "stats": dict(eng.stats)}
+            "stats": dict(eng.stats),
+            "engine_stats": eng.engine_stats()}
 
 
 def run(tiny: bool = False) -> List[Dict]:
@@ -294,6 +310,37 @@ def run(tiny: bool = False) -> List[Dict]:
             m = _run_continuous(ocfg, wparams, reqs, oarr, max_len)
             rows.append(_row(arch, wname, "continuous", "overload", n, cfg,
                              ocfg, m))
+            # crash: the same poisson trace through the supervised engine,
+            # fault-free vs a mid-trace serve.engine_step kill. Measures
+            # what recovery *costs* (extra ticks to replay the in-flight
+            # prefix, goodput ratio vs fault-free) and pins that it loses
+            # nothing (every request completes, token-identical outputs —
+            # deterministic replay, docs/SERVING.md §Crash recovery)
+            kcfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+                cfg.serve, scheduler="continuous",
+                prefill_chunk=cfg.serve.prefill_chunk, supervise=True))
+            clean = _run_continuous(kcfg, wparams, reqs, arrivals, max_len,
+                                    supervise=True)
+            kill_tick = max(2, clean["ticks"] // 2)
+            crash = _run_continuous(kcfg, wparams, reqs, arrivals, max_len,
+                                    supervise=True,
+                                    arm=f"serve.engine_step@{kill_tick}")
+            es = crash["engine_stats"]
+            ident = all(
+                np.array_equal(crash["tokens_of"][i], clean["tokens_of"][i])
+                for i in clean["tokens_of"])
+            rows.append(_row(
+                arch, wname, "continuous", "crash", n, cfg, kcfg, crash,
+                restarts=es.get("restarts", 0),
+                replayed_requests=es.get("replayed_requests", 0),
+                recovered_completions=es.get("recovered_completions", 0),
+                kill_tick=kill_tick,
+                ticks_fault_free=clean["ticks"],
+                ticks_to_recover=crash["ticks"] - clean["ticks"],
+                goodput_ratio=round(
+                    (crash["tokens_total"] / crash["busy_s"])
+                    / (clean["tokens_total"] / clean["busy_s"]), 4),
+                token_identical=bool(ident)))
         rows.extend(_run_longctx(arch, cfg, params, tiny, load_factor))
     return rows
 

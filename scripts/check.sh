@@ -41,13 +41,23 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   tests/test_gptq_kernel.py
 
 # robustness leg: the fault-injection suite (guardrail ladder, serving
-# hardening, kill-and-resume parity — registered `faults` marker), plus one
-# kill-and-resume smoke over real process boundaries: launch.quantize is
-# interrupted by an armed fault, resumed from its step checkpoints, and
-# the packed artifacts compared bitwise against a clean run
+# hardening, supervisor crash recovery, kill-and-resume parity — registered
+# `faults` marker), plus one kill-and-resume smoke over real process
+# boundaries: launch.quantize is interrupted by an armed fault, resumed
+# from its step checkpoints (fp16 and int8 KV-cache configs), and the
+# packed artifacts compared bitwise against a clean run
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-  python -m pytest -x -q -m faults tests/test_faults.py
+  python -m pytest -x -q -m faults
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/resume_smoke.py
+
+# chaos leg: seeded randomized fault schedules across every registered
+# site, driven through a supervised serving trace and a kill/resume
+# quantize run at smoke scale; the invariant checker (exactly-one
+# terminal status per request, token-identical recovery, self-consistent
+# counters, bitwise-identical resumed artifacts) fails the leg on any
+# violation. Three fixed seeds → the same schedules every CI run.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python scripts/chaos_soak.py --seeds 0,1,2 --smoke
 
 # benchmark smoke: the quantization hot path must stay runnable end to end —
 # table4 covers the executor/dispatch story, table5 the stage-2 convergence

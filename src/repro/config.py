@@ -326,6 +326,24 @@ class ServeConfig:
     decode_nan_guard: bool = True   # quarantine lanes whose decode logits go
     #                                 non-finite (evict only the poisoned
     #                                 lane, keep the batch decoding)
+    supervise: bool = False         # wrap the continuous engine in
+    #                                 serving/supervisor.SupervisedEngine:
+    #                                 an engine crash (exception escaping
+    #                                 step(), serve.engine_step fault, or a
+    #                                 watchdog trip) rebuilds the engine and
+    #                                 recovers in-flight requests by
+    #                                 deterministic replay (docs/SERVING.md
+    #                                 §Crash recovery)
+    step_timeout_s: float = 0.0     # supervisor watchdog (0 = off): a tick
+    #                                 whose clock() span exceeds this is
+    #                                 treated as hung — the engine is
+    #                                 rebuilt and its requests replayed
+    #                                 (same injectable clock as deadlines)
+    max_restarts: int = 3           # engine rebuilds the supervisor may
+    #                                 perform before a crash loop surfaces
+    #                                 as supervisor.EngineRestartExhausted
+    #                                 (an explicit terminal error, never a
+    #                                 silent retry forever)
 
 
 @dataclass

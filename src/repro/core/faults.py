@@ -1,40 +1,14 @@
 """Deterministic fault-injection plane (the robustness backbone).
 
 Production failure modes — a non-PSD Hessian at layer 40, a NaN logit in
-one decode lane, a Mosaic lowering failure — are rare, hardware-flavored
-and unreproducible in CI.  This module makes every one of them a *named
-site* that tests and launchers arm with a *seeded trigger schedule*, so
-each failure path executes deterministically:
-
-======================== ====================================================
-site                     fires at
-======================== ====================================================
-``hessian.cholesky``     stage-1 dispatch of a quant group: corrupts the
-                         stacked Gram matrix (modes: ``nonpsd`` — rescued by
-                         the damping ladder; ``nan`` — forces the RTN rung)
-``plan.stage1_executor`` just before the stage-1 dispatch (kill)
-``plan.stage2_executor`` just before the stage-2 dispatch (kill)
-``stream.capture_forward`` entry of a layer's capture pass (kill)
-``serve.decode_step``    a decode tick: poisons one occupied lane's KV
-                         cache with NaN (the quarantine path detects it)
-``serve.prefill_chunk``  a prefill chunk dispatch (request-level error)
-``kernels.pallas_dispatch`` the pallas branch of ``w4a16_matmul`` at trace
-                         time (drives the runtime pallas→xla degradation)
-======================== ====================================================
-
-Arming grammar (``FaultsConfig.arm`` / :func:`inject`): a comma-separated
-list of ``site@trigger[:mode]`` specs, where ``trigger`` is a 1-based hit
-schedule —
-
-- ``site@3``        fire exactly on the 3rd hit,
-- ``site@3..5``     fire on hits 3 through 5,
-- ``site@3+``       fire on every hit from the 3rd on,
-- ``site@p0.25``    fire each hit with probability 0.25, drawn from a
-  per-site generator seeded by ``(seed, site)`` — the schedule is a pure
-  function of the seed, so every test replay is identical.
-
-``mode`` defaults to ``"kill"``; sites interpret it (``hessian.cholesky``
-takes ``nonpsd``/``nan``).  Sites that are not armed cost one dict lookup.
+one decode lane, a Mosaic lowering failure, an engine tick dying under a
+live queue — are rare, hardware-flavored and unreproducible in CI.  This
+module makes every one of them a *named site* (``FAULT_SITES``) that tests
+and launchers arm with a *seeded trigger schedule*, so each failure path
+executes deterministically.  The full site table, the
+``site@trigger[:mode]`` arming grammar, worked examples, and the
+supervisor/watchdog knobs that consume the ``serve.*`` sites live in
+docs/FAULTS.md.
 
 Hot code calls :func:`fire` (raises :class:`FaultError` when the schedule
 triggers) or :func:`poll` (returns the :class:`FaultSpec` for sites whose
@@ -58,7 +32,9 @@ FAULT_SITES = (
     "stream.capture_forward",
     "serve.decode_step",
     "serve.prefill_chunk",
+    "serve.engine_step",
     "kernels.pallas_dispatch",
+    "checkpoint.load",
 )
 
 

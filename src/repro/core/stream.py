@@ -264,8 +264,22 @@ def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
         ckpt = Checkpointer(qc.ckpt_dir, keep=qc.ckpt_keep)
         fp = _resume_fingerprint(cfg)
         if qc.resume == "auto" and ckpt.latest_step() is not None:
-            arrays, extra = ckpt.load_arrays()
-            if extra.get("walk_fingerprint") != fp:
+            from repro.distributed.checkpoint import CheckpointIntegrityError
+            try:
+                arrays, extra = ckpt.load_arrays()
+            except CheckpointIntegrityError as e:
+                # damaged checkpoint (failed crc/manifest verification) is a
+                # *different* condition from a config mismatch — warn with
+                # the distinction and redo the walk from scratch; the next
+                # step boundary overwrites the damaged state
+                warnings.warn(
+                    "quant.resume=auto: checkpoint in "
+                    f"{qc.ckpt_dir!r} is corrupt ({e}) — starting fresh",
+                    RuntimeWarning)
+                arrays, extra = None, {}
+            if arrays is None:
+                pass
+            elif extra.get("walk_fingerprint") != fp:
                 warnings.warn(
                     "quant.resume=auto: checkpoint in "
                     f"{qc.ckpt_dir!r} was written by a different config "

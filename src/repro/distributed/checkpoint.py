@@ -3,8 +3,8 @@
 Layout (one directory per step)::
 
     <ckpt_dir>/step_000123/
-        manifest.json      # step, config fingerprint, mesh shape, data state,
-                           # tree structure, per-leaf dtype/shape, wall time
+        manifest.json      # schema version, step, tree structure, per-leaf
+                           # dtype/shape/crc32, data state, wall time
         arrays.npz         # flattened leaves (gathered to host)
     <ckpt_dir>/LATEST      # atomic pointer (tmp + rename)
 
@@ -18,26 +18,74 @@ Properties required at scale and tested in tests/test_checkpoint.py:
     checkpoint written on one mesh restores onto any other mesh/device
     count — ``restore(..., shardings=...)`` re-shards on load via
     ``jax.device_put``.
+  - **integrity**: the manifest records a schema version and a per-leaf
+    crc32 (over the npz-encoded bytes) at save; every load path verifies
+    them and raises :class:`CheckpointIntegrityError` on any mismatch or
+    unreadable file — a flipped byte is a typed error, never a silent
+    load of garbage. The ``checkpoint.load`` fault site (core/faults.py)
+    drives this path deterministically in tests and chaos soak.
   - **retention**: keep the newest ``keep`` checkpoints.
   - **data-iterator state** is stored in the manifest, so restart resumes
     the input stream exactly.
   - **preemption**: ``SignalCheckpointer`` flips a flag on SIGTERM; the
     trainer checks it at step boundaries and checkpoints before exit.
+
+Packed serving artifacts (the ``launch.quantize`` → ``launch.serve``
+hand-off) get the same guarantee through :func:`save_artifact` /
+:func:`load_artifact`: an atomically-written pickle plus a
+``<path>.manifest.json`` sidecar holding the payload sha256; corruption
+raises :class:`ArtifactIntegrityError` at load.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
+import pickle
 import shutil
 import signal
 import threading
 import time
+import warnings
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import faults
+
+#: manifest schema written by Checkpointer.save; v1 (pre-integrity) loads
+#: are tolerated (no crc fields to verify), anything newer is refused
+CHECKPOINT_SCHEMA = 2
+#: sidecar schema written by save_artifact
+ARTIFACT_SCHEMA = 1
+
+
+class CheckpointIntegrityError(RuntimeError):
+    """A checkpoint failed verification at load: unreadable npz/manifest,
+    per-leaf crc32 mismatch, or a schema this code does not understand.
+    Typed so callers (quant.resume=auto, the serving supervisor) can
+    distinguish *corruption* from *absence* or *staleness*."""
+
+
+class ArtifactIntegrityError(CheckpointIntegrityError):
+    """A packed serving artifact failed its sha256 sidecar check."""
+
+
+def _fire_load_fault(what: str) -> None:
+    """``checkpoint.load`` site: mode ``corrupt`` surfaces as the typed
+    integrity error (exactly what real bit-rot produces), any other mode
+    is a kill (FaultError)."""
+    spec = faults.poll("checkpoint.load")
+    if spec is not None:
+        if spec.mode == "corrupt":
+            raise CheckpointIntegrityError(
+                f"{what}: injected corruption (checkpoint.load:corrupt)")
+        raise faults.FaultError("checkpoint.load", spec.mode,
+                                faults.PLANE.hits["checkpoint.load"])
 
 
 # np.savez silently stores ml_dtypes arrays (bfloat16, ...) as raw void
@@ -96,15 +144,21 @@ class Checkpointer:
         arrays = {name: np.asarray(jax.device_get(leaf))
                   for name, leaf in named}
         treedef = jax.tree_util.tree_structure(tree)
+        encoded = {n: _npz_encode(a) for n, a in arrays.items()}
+        # crc32 over the *encoded* bytes — the representation that actually
+        # lands on disk, so verification at load needs no decode first
         manifest = {
+            "schema": CHECKPOINT_SCHEMA,
             "step": int(step),
             "time": time.time(),
             "treedef": str(treedef),
-            "leaves": {n: {"shape": list(a.shape), "dtype": str(a.dtype)}
+            "leaves": {n: {"shape": list(a.shape), "dtype": str(a.dtype),
+                           "crc32": zlib.crc32(
+                               np.ascontiguousarray(encoded[n]).tobytes())}
                        for n, a in arrays.items()},
             "extra": extra or {},
         }
-        arrays = {n: _npz_encode(a) for n, a in arrays.items()}
+        arrays = encoded
 
         def write():
             try:
@@ -167,6 +221,50 @@ class Checkpointer:
             return None
         return int(name.split("_")[1])
 
+    def _read_verified(self, step: int
+                       ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        """Read + verify one step dir: manifest schema check, every leaf
+        materialized, crc32 verified (schema >= 2). Any unreadable file,
+        npz member, or checksum mismatch raises
+        :class:`CheckpointIntegrityError` — the typed "this checkpoint is
+        damaged" signal, distinct from FileNotFoundError (absence)."""
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        _fire_load_fault(d)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointIntegrityError(
+                f"{d}: unreadable manifest ({e!r})") from e
+        schema = manifest.get("schema", 1)
+        if schema > CHECKPOINT_SCHEMA:
+            raise CheckpointIntegrityError(
+                f"{d}: manifest schema {schema} is newer than supported "
+                f"{CHECKPOINT_SCHEMA}")
+        encoded: Dict[str, np.ndarray] = {}
+        try:
+            # np.load on an npz is lazy; materializing each member runs the
+            # zip CRC as a side effect, so truncation and byte flips in the
+            # container surface here as BadZipFile/zlib errors
+            data = np.load(os.path.join(d, "arrays.npz"))
+            for name in manifest["leaves"]:
+                encoded[name] = data[name]
+        except CheckpointIntegrityError:
+            raise
+        except Exception as e:     # noqa: BLE001 — wrapped as typed error
+            raise CheckpointIntegrityError(
+                f"{d}: unreadable arrays.npz ({e!r})") from e
+        for name, meta in manifest["leaves"].items():
+            want = meta.get("crc32")
+            if want is None:       # schema-1 checkpoint: nothing to verify
+                continue
+            got = zlib.crc32(np.ascontiguousarray(encoded[name]).tobytes())
+            if got != want:
+                raise CheckpointIntegrityError(
+                    f"{d}: leaf {name!r} crc32 mismatch "
+                    f"(stored {want}, recomputed {got})")
+        return manifest, encoded
+
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Tuple[Any, Dict[str, Any]]:
         """Load into the structure of ``tree_like``; reshard if given.
@@ -179,10 +277,7 @@ class Checkpointer:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(d, "arrays.npz"))
+        manifest, data = self._read_verified(step)
         named = _tree_paths(tree_like)
         leaves = []
         for name, like in named:
@@ -214,13 +309,95 @@ class Checkpointer:
             step = self.latest_step()
             if step is None:
                 raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(d, "arrays.npz"))
+        manifest, data = self._read_verified(step)
         out = {name: _npz_decode(data[name], meta["dtype"])
                for name, meta in manifest["leaves"].items()}
         return out, manifest["extra"]
+
+
+# ---------------------------------------------------------------------------
+# Packed serving artifacts (pickle + sha256 sidecar)
+# ---------------------------------------------------------------------------
+
+def artifact_manifest_path(path: str) -> str:
+    return path + ".manifest.json"
+
+
+def save_artifact(path: str, tree: Any,
+                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Atomically write a pickled pytree + integrity sidecar.
+
+    The sidecar (``<path>.manifest.json``) records the payload sha256 and
+    a schema version; :func:`load_artifact` refuses a payload whose digest
+    does not match — a flipped byte in a packed int4 artifact is a typed
+    :class:`ArtifactIntegrityError`, never a silent load. Returns the
+    manifest dict."""
+    payload = pickle.dumps(jax.device_get(tree),
+                           protocol=pickle.HIGHEST_PROTOCOL)
+    manifest = {
+        "schema": ARTIFACT_SCHEMA,
+        "sha256": hashlib.sha256(payload).hexdigest(),
+        "bytes": len(payload),
+        "time": time.time(),
+        "extra": extra or {},
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    mpath = artifact_manifest_path(path)
+    mtmp = mpath + ".tmp"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(mtmp, mpath)
+    return manifest
+
+
+def load_artifact(path: str) -> Any:
+    """Load a pickled artifact through its integrity sidecar.
+
+    Verifies the sidecar sha256 before unpickling; raises
+    :class:`ArtifactIntegrityError` on digest mismatch, unreadable
+    sidecar, unsupported schema, or an unpicklable payload. A missing
+    sidecar (pre-manifest artifact) loads with a warning — legacy files
+    keep working, new writes are always covered."""
+    _fire_load_fault(path)
+    with open(path, "rb") as f:
+        payload = f.read()
+    mpath = artifact_manifest_path(path)
+    if not os.path.exists(mpath):
+        warnings.warn(
+            f"{path}: no integrity manifest sidecar — loading unchecked "
+            "(legacy artifact; re-save with save_artifact to cover it)",
+            RuntimeWarning, stacklevel=2)
+    else:
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise ArtifactIntegrityError(
+                f"{mpath}: unreadable manifest ({e!r})") from e
+        schema = manifest.get("schema", 1)
+        if schema > ARTIFACT_SCHEMA:
+            raise ArtifactIntegrityError(
+                f"{path}: artifact schema {schema} is newer than supported "
+                f"{ARTIFACT_SCHEMA}")
+        digest = hashlib.sha256(payload).hexdigest()
+        if manifest.get("sha256") != digest:
+            raise ArtifactIntegrityError(
+                f"{path}: sha256 mismatch (manifest "
+                f"{manifest.get('sha256')!r}, payload {digest!r}) — "
+                "artifact is corrupt or was modified after save")
+    try:
+        return pickle.loads(payload)
+    except Exception as e:         # noqa: BLE001 — wrapped as typed error
+        raise ArtifactIntegrityError(
+            f"{path}: unpicklable artifact ({e!r})") from e
 
 
 class SignalCheckpointer:

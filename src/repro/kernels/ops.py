@@ -56,10 +56,16 @@ def _round_up(x: int, m: int) -> int:
 
 _FALLBACK_STATS: dict[str, int] = {}
 _FALLBACK_WARNED: set[str] = set()
+# per-caller scopes (innermost last): engine instances route their own
+# fallback accounting here so two engines in one process never read each
+# other's downgrades out of the module-global dict (engine_stats() would
+# otherwise cross-contaminate — pinned in tests/test_supervisor.py)
+_FALLBACK_SCOPES: list[dict[str, int]] = []
 
 
 def fallback_stats() -> dict[str, int]:
-    """Copy of the ``{"op:reason": count}`` auto→xla downgrade counters."""
+    """Copy of the ``{"op:reason": count}`` auto→xla downgrade counters
+    (process-global; per-engine views come from :func:`fallback_scope`)."""
     return dict(_FALLBACK_STATS)
 
 
@@ -68,9 +74,25 @@ def reset_fallback_stats() -> None:
     _FALLBACK_WARNED.clear()
 
 
+@contextlib.contextmanager
+def fallback_scope(counters: dict[str, int]):
+    """Additionally route downgrade counters into ``counters`` while the
+    scope is active. Scopes nest; only the innermost receives the note —
+    each engine wraps its own traces, so a downgrade is attributed to
+    exactly the engine whose trace triggered it."""
+    _FALLBACK_SCOPES.append(counters)
+    try:
+        yield counters
+    finally:
+        _FALLBACK_SCOPES.pop()
+
+
 def _note_fallback(op: str, reason: str) -> None:
     key = f"{op}:{reason}"
     _FALLBACK_STATS[key] = _FALLBACK_STATS.get(key, 0) + 1
+    if _FALLBACK_SCOPES:
+        scope = _FALLBACK_SCOPES[-1]
+        scope[key] = scope.get(key, 0) + 1
     if key not in _FALLBACK_WARNED:
         _FALLBACK_WARNED.add(key)
         warnings.warn(

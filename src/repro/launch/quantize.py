@@ -24,7 +24,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import pickle
 
 import jax
 
@@ -33,7 +32,7 @@ from repro.configs.registry import get_config
 from repro.core import faults
 from repro.core.pipeline import pack_for_serving, quantize_model
 from repro.data import MarkovLM, calibration_batches
-from repro.distributed.checkpoint import Checkpointer
+from repro.distributed.checkpoint import Checkpointer, save_artifact
 from repro.launch.mesh import make_quant_mesh
 from repro.models import transformer as T
 
@@ -100,9 +99,13 @@ def main(argv=None):
     tag = mc.name
     with open(os.path.join(args.out, f"{tag}.report.json"), "w") as f:
         json.dump([{**vars(r)} for r in report.linears], f, indent=1)
-    with open(os.path.join(args.out, f"{tag}.params.pkl"), "wb") as f:
-        pickle.dump(jax.device_get(packed), f)
-    print(f"[quantize] wrote {args.out}/{tag}.params.pkl")
+    # atomic write + sha256 sidecar manifest: launch.serve (and the
+    # supervisor's params reload) verify the digest at load, so a flipped
+    # byte in the artifact is a typed error, never a silent garbage load
+    save_artifact(os.path.join(args.out, f"{tag}.params.pkl"),
+                  jax.device_get(packed), extra={"arch": tag})
+    print(f"[quantize] wrote {args.out}/{tag}.params.pkl (+ integrity "
+          "manifest)")
 
 
 if __name__ == "__main__":

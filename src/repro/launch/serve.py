@@ -7,11 +7,18 @@
 continuous-batching engine (serving/scheduler.py) instead of the static
 batch; ``--pack-rtn`` RTN-packs the (init or loaded) weights to int4 so
 the quantized decode hot path runs without a quantize-pipeline artifact.
+
+``--params`` artifacts load through the integrity-checked
+``distributed.checkpoint.load_artifact`` path (sha256 sidecar manifest
+from ``launch.quantize``): a corrupt artifact is a typed
+``ArtifactIntegrityError``, never a silent load.
+``serve.supervise=true`` wraps the continuous engine in the crash-
+recovering supervisor (serving/supervisor.py, docs/SERVING.md §Crash
+recovery).
 """
 from __future__ import annotations
 
 import argparse
-import pickle
 import time
 
 import jax
@@ -21,9 +28,11 @@ from repro.config import apply_overrides, parse_overrides
 from repro.configs.registry import get_config
 from repro.core import faults
 from repro.data import MarkovLM
+from repro.distributed.checkpoint import load_artifact
 from repro.models import transformer as T
 from repro.serving.engine import generate
 from repro.serving.scheduler import ContinuousEngine
+from repro.serving.supervisor import SupervisedEngine
 
 
 def main(argv=None):
@@ -49,9 +58,9 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(0)
     if args.params:
-        with open(args.params, "rb") as f:
-            params = pickle.load(f)
-        print(f"[serve] loaded int4 params from {args.params}")
+        params = load_artifact(args.params)
+        print(f"[serve] loaded int4 params from {args.params} "
+              "(integrity-checked)")
     else:
         params = (T.init_encdec_params(mc, key) if mc.is_encoder_decoder
                   else T.init_params(mc, key))
@@ -75,7 +84,17 @@ def main(argv=None):
     if cfg.serve.scheduler == "continuous":
         n_front = batch["embeds"].shape[1] if "embeds" in batch else 0
         cap = args.prompt_len + n_front + cfg.serve.max_new_tokens + 1
-        eng = ContinuousEngine(cfg, params, max_len=cap)
+        if cfg.serve.supervise:
+            # crash-recovering supervisor; a --params path is handed down
+            # so a rebuild re-reads the artifact through the integrity
+            # check instead of trusting a possibly-poisoned in-memory tree
+            eng = SupervisedEngine(cfg, params, max_len=cap,
+                                   params_path=args.params or None)
+            print("[serve] supervised engine "
+                  f"(max_restarts={cfg.serve.max_restarts}, "
+                  f"step_timeout_s={cfg.serve.step_timeout_s})")
+        else:
+            eng = ContinuousEngine(cfg, params, max_len=cap)
         rids = []
         for i in range(args.batch):
             one = {k: v[i:i + 1] for k, v in batch.items()}
@@ -87,7 +106,7 @@ def main(argv=None):
         if bad:
             print(f"[serve] non-ok requests: {bad}")
         if any(done[r].status != "ok" for r in rids) or \
-                any(eng.stats.values()):
+                any(v for v in eng.stats.values()):
             print(f"[serve] engine stats: {eng.engine_stats()}")
     else:
         res = generate(cfg, params, batch)

@@ -146,6 +146,10 @@ class ContinuousEngine:
             "quarantined": 0, "kernel_degradations": 0,
             "prefill_failures": 0,
         }
+        # per-instance trace-time fallback counters (kernels.ops routes
+        # notes to the innermost active scope): two engines in one process
+        # must not read each other's downgrades out of the module-global
+        self._kernel_fallbacks: Dict[str, int] = {}
         self._build_jit()
 
     def _build_jit(self) -> None:
@@ -177,7 +181,8 @@ class ContinuousEngine:
         (rebuild jits, count, warn) and retry the same call once.
         Already-xla faults and non-kernel faults propagate."""
         with kops.w4a16_default_impl(self._impl), \
-                kops.kv_attn_default_impl(self._kv_impl):
+                kops.kv_attn_default_impl(self._kv_impl), \
+                kops.fallback_scope(self._kernel_fallbacks):
             try:
                 return getattr(self, name)(*args)
             except Exception as e:          # noqa: BLE001 — classified below
@@ -192,17 +197,20 @@ class ContinuousEngine:
         self._kv_impl = "xla"
         self._build_jit()
         with kops.w4a16_default_impl("xla"), \
-                kops.kv_attn_default_impl("xla"):
+                kops.kv_attn_default_impl("xla"), \
+                kops.fallback_scope(self._kernel_fallbacks):
             return getattr(self, name)(*args)
 
     def engine_stats(self) -> Dict[str, Any]:
         """Failure counters + current kernel backend + trace-time fallback
-        counters (kernels.ops) — the observable surface the bench and tests
-        assert on."""
+        counters — the observable surface the bench and tests assert on.
+        ``kernel_fallbacks`` is *this instance's* scope (kernels.ops
+        fallback_scope), not the process-global dict, so two engines in one
+        process never report each other's downgrades."""
         s: Dict[str, Any] = dict(self.stats)
         s["w4a16_impl"] = self._impl
         s["kv_impl"] = self._kv_impl
-        s["kernel_fallbacks"] = kops.fallback_stats()
+        s["kernel_fallbacks"] = dict(self._kernel_fallbacks)
         return s
 
     # -- submission --------------------------------------------------------
@@ -210,7 +218,8 @@ class ContinuousEngine:
     def submit(self, batch: Dict[str, jax.Array], *,
                max_new_tokens: Optional[int] = None,
                eos_id: int = -1,
-               timeout_s: Optional[float] = None) -> int:
+               timeout_s: Optional[float] = None,
+               force: bool = False) -> int:
         """Queue one request. ``batch`` is batch-1 ({tokens, embeds?/frames?}).
 
         Raises :class:`QueueFullError` (counted in ``stats["rejections"]``)
@@ -218,10 +227,16 @@ class ContinuousEngine:
         waiting for admission. ``timeout_s`` (default
         ``serve.request_timeout_s``; 0 = no deadline) starts the request's
         wall-clock budget now — queue wait counts against it.
+
+        ``force=True`` bypasses the queue bound: the supervisor's crash
+        replay resubmits every in-flight request at once — requests that
+        were already *admitted* (lanes, ready set, prefill) before the
+        crash, so re-rejecting them at the admission bound would turn a
+        recovery into silent request loss.
         """
         assert batch["tokens"].shape[0] == 1, "submit one sequence at a time"
         max_queue = self.cfg.serve.max_queue
-        if max_queue > 0 and len(self._queue) >= max_queue:
+        if not force and max_queue > 0 and len(self._queue) >= max_queue:
             self.stats["rejections"] += 1
             raise QueueFullError(
                 f"admission queue full ({len(self._queue)} >= {max_queue})")
@@ -280,7 +295,13 @@ class ContinuousEngine:
         The w4a16 backend context is installed per jitted call inside
         :meth:`_guarded` (not here) so a mid-tick pallas→xla degradation
         takes effect for the retry of the very call that faulted.
+
+        The ``serve.engine_step`` kill site fires *before* any tick
+        mutation, modeling the whole engine dying between ticks — the
+        supervisor (serving/supervisor.py) catches the escaped exception,
+        rebuilds the engine, and replays in-flight requests.
         """
+        faults.fire("serve.engine_step")
         return self._step()
 
     def _sweep_deadlines(self, finished: List[FinishedSeq]) -> None:

@@ -1,0 +1,343 @@
+"""Supervised serving: engine crash recovery by deterministic replay.
+
+``SupervisedEngine`` wraps :class:`~repro.serving.scheduler.ContinuousEngine`
+with the one guarantee the engine itself cannot provide: surviving its own
+death. The engine hardens *within* a tick (deadlines, NaN quarantine,
+kernel degradation — docs/SERVING.md §Failure handling); the supervisor
+hardens the tick loop itself:
+
+- **crash detection** — any exception escaping ``step()`` (including the
+  ``serve.engine_step`` kill-type fault site, which fires before any tick
+  mutation), or a watchdog trip: a tick whose ``clock()`` span exceeds
+  ``serve.step_timeout_s`` is treated as hung (same injectable clock the
+  deadline machinery runs on, so tests and the bench drive it virtually).
+- **recovery state** — host-side metadata only, maintained at tick
+  boundaries from the engine's own ``StepReport``: the original prompt
+  batch (host copies), per-request budget/eos/deadline, and every token
+  emitted so far. No KV tensors are ever snapshotted — they are
+  recomputable, which is the entire point.
+- **deterministic replay** — greedy decode is deterministic and
+  schedule-independent per sequence (pinned continuous == static in
+  tests/test_serving.py), so resubmitting prompt-plus-emitted-prefix to a
+  fresh engine produces token-identical continuations. The supervisor
+  rebuilds the engine (fresh jits; params re-read through the
+  integrity-checked ``distributed.checkpoint.load_artifact`` path when a
+  ``params_path`` is given) and resubmits every in-flight request in its
+  original submission order, with the remaining token budget and the
+  remaining deadline. Pinned in tests/test_supervisor.py: a mid-trace
+  ``serve.engine_step`` kill completes every non-expired request with
+  outputs token-identical to the fault-free run.
+- **bounded restarts** — ``serve.max_restarts`` rebuilds, then a crash
+  loop surfaces as :class:`EngineRestartExhausted` (an explicit terminal
+  error). Every recovery is counted in :meth:`engine_stats`
+  (``restarts``, ``watchdog_trips``, ``replayed_requests``,
+  ``recovered_completions``), never silent.
+
+Temperature > 0 is *not* bit-matched across a restart: sampling draws
+from a per-request key stream keyed by engine-local rids, which a fresh
+engine restarts. Greedy (``serve.temperature=0``) is the deployment
+configuration the replay guarantee covers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.config import Config
+from repro.distributed.checkpoint import load_artifact
+from repro.serving.scheduler import ContinuousEngine, FinishedSeq, StepReport
+
+
+class EngineRestartExhausted(RuntimeError):
+    """The supervisor hit ``serve.max_restarts`` engine rebuilds — a crash
+    loop is surfaced as a terminal error instead of an infinite retry."""
+
+
+class _Tracked:
+    """Host-side recoverable state for one in-flight request."""
+
+    __slots__ = ("rid", "batch", "max_new", "eos_id", "deadline",
+                 "prompt_len", "emitted", "replay_base", "replays")
+
+    def __init__(self, rid: int, batch: Dict[str, np.ndarray], max_new: int,
+                 eos_id: int, deadline: float, prompt_len: int):
+        self.rid = rid
+        self.batch = batch              # host copies of the submitted batch
+        self.max_new = max_new
+        self.eos_id = eos_id
+        self.deadline = deadline        # absolute clock() time; inf = none
+        self.prompt_len = prompt_len
+        self.emitted: List[int] = []    # every usable token so far
+        self.replay_base: List[int] = []   # emitted prefix at last replay
+        self.replays = 0
+
+
+class SupervisedEngine:
+    """Crash-recovering wrapper around :class:`ContinuousEngine`.
+
+    Drop-in for the engine's ``submit``/``cancel``/``step``/``run``/
+    ``engine_stats`` surface, with supervisor-scope rids (stable across
+    engine rebuilds)."""
+
+    def __init__(self, cfg: Config, params: Any = None, *,
+                 max_len: Optional[int] = None, seed: int = 0,
+                 clock: Optional[Callable[[], float]] = None,
+                 params_path: Optional[str] = None):
+        if params is None:
+            if params_path is None:
+                raise ValueError("need params or params_path")
+            params = load_artifact(params_path)
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.seed = seed
+        self.clock = clock or time.monotonic
+        self.params_path = params_path
+        self._tracked: Dict[int, _Tracked] = {}
+        self._sup_of: Dict[int, int] = {}   # engine rid -> supervisor rid
+        self._eng_of: Dict[int, int] = {}   # supervisor rid -> engine rid
+        self._next_rid = 0
+        self.stats: Dict[str, int] = {
+            "restarts": 0, "watchdog_trips": 0, "replayed_requests": 0,
+            "recovered_completions": 0, "params_reloads": 0,
+        }
+        # failure counters folded in from engines that died (the live
+        # engine's stats are added on top in engine_stats())
+        self._stats_acc: Dict[str, int] = {}
+        self._fallbacks_acc: Dict[str, int] = {}
+        self._eng = self._make_engine()
+
+    def _make_engine(self) -> ContinuousEngine:
+        return ContinuousEngine(self.cfg, self.params, max_len=self.max_len,
+                                seed=self.seed, clock=self.clock)
+
+    # -- observability -------------------------------------------------------
+
+    @property
+    def lanes(self) -> int:
+        return self._eng.lanes
+
+    @property
+    def active(self) -> int:
+        return self._eng.active
+
+    @property
+    def idle(self) -> bool:
+        return self._eng.idle
+
+    def engine_stats(self) -> Dict[str, Any]:
+        """Live-engine counters + counters inherited from crashed engines +
+        the supervisor's own recovery counters — nothing resets to zero
+        just because the engine was rebuilt."""
+        s: Dict[str, Any] = dict(self._stats_acc)
+        for k, v in self._eng.stats.items():
+            s[k] = s.get(k, 0) + v
+        s["w4a16_impl"] = self._eng._impl
+        s["kv_impl"] = self._eng._kv_impl
+        fb = dict(self._fallbacks_acc)
+        for k, v in self._eng._kernel_fallbacks.items():
+            fb[k] = fb.get(k, 0) + v
+        s["kernel_fallbacks"] = fb
+        s.update(self.stats)
+        return s
+
+    # -- request surface -----------------------------------------------------
+
+    @staticmethod
+    def _prompt_positions(batch: Dict[str, Any]) -> int:
+        """Decoder prompt positions incl. frontend embeds (matches the
+        engine's ``h.shape[1]`` at admit; enc-dec frames live on the
+        encoder side and add none)."""
+        n = int(batch["tokens"].shape[1])
+        if "frames" not in batch and batch.get("embeds") is not None:
+            n += int(batch["embeds"].shape[1])
+        return n
+
+    def submit(self, batch: Dict[str, Any], *,
+               max_new_tokens: Optional[int] = None,
+               eos_id: int = -1,
+               timeout_s: Optional[float] = None) -> int:
+        """Same contract as ``ContinuousEngine.submit`` (QueueFullError on a
+        full admission queue), returning a supervisor-scope rid that stays
+        valid across engine rebuilds."""
+        mnt = max_new_tokens or self.cfg.serve.max_new_tokens
+        tmo = self.cfg.serve.request_timeout_s if timeout_s is None \
+            else timeout_s
+        # engine submit first: a rejected request is never tracked
+        eng_rid = self._eng.submit(batch, max_new_tokens=mnt, eos_id=eos_id,
+                                   timeout_s=tmo)
+        deadline = self.clock() + tmo if tmo and tmo > 0 else float("inf")
+        host = {k: (None if v is None else np.asarray(jax.device_get(v)))
+                for k, v in batch.items()}
+        rid = self._next_rid
+        self._next_rid += 1
+        self._tracked[rid] = _Tracked(rid, host, mnt, eos_id, deadline,
+                                      self._prompt_positions(batch))
+        self._sup_of[eng_rid] = rid
+        self._eng_of[rid] = eng_rid
+        return rid
+
+    def cancel(self, rid: int) -> Optional[FinishedSeq]:
+        t = self._tracked.get(rid)
+        eng_rid = self._eng_of.get(rid)
+        if t is None or eng_rid is None:
+            return None
+        f = self._eng.cancel(eng_rid)
+        if f is None:                   # engine lost it; finish from tracking
+            f = FinishedSeq(eng_rid, np.zeros((0,), np.int32), 0, 0,
+                            "cancelled")
+        return self._translate_finished(f)
+
+    # -- the supervised tick -------------------------------------------------
+
+    def step(self) -> StepReport:
+        """One supervised tick: run the engine's tick; on an escaped
+        exception or a watchdog trip, rebuild and replay. A watchdog trip
+        absorbs the (completed, just slow) report *first* so its tokens are
+        not replayed twice."""
+        t0 = self.clock()
+        try:
+            rep = self._eng.step()
+        except Exception as e:          # noqa: BLE001 — the contract is
+            # "any exception escaping step()" = engine death
+            return self._recover(e)
+        rep = self._absorb(rep)
+        wd = self.cfg.serve.step_timeout_s
+        if wd and wd > 0 and (self.clock() - t0) > wd:
+            self.stats["watchdog_trips"] += 1
+            rec = self._recover(None)
+            return rep._replace(finished=rep.finished + rec.finished,
+                                active=rec.active)
+        return rep
+
+    def run(self) -> Dict[int, FinishedSeq]:
+        """Drain: tick until every tracked request has finished."""
+        done: Dict[int, FinishedSeq] = {}
+        while not self.idle:
+            for f in self.step().finished:
+                done[f.rid] = f
+        return done
+
+    # -- internals -----------------------------------------------------------
+
+    def _absorb(self, rep: StepReport) -> StepReport:
+        """Record emitted tokens into the host-side tracking state and
+        translate the report to supervisor rids."""
+        sup = self._sup_of
+        first_tokens: List[tuple] = []
+        decoded: List[tuple] = []
+        for erid, tok in rep.first_tokens:
+            rid = sup.get(erid)
+            if rid is None:
+                continue
+            t = self._tracked[rid]
+            t.emitted.append(int(tok))
+            # a replayed request's "first token" from the fresh engine is
+            # really continuation token len(replay_base)+1 — report it as
+            # decoded so TTFT consumers never see a second first-token
+            if t.replay_base:
+                decoded.append((rid, tok))
+            else:
+                first_tokens.append((rid, tok))
+        for erid, tok in rep.decoded:
+            rid = sup.get(erid)
+            if rid is None:
+                continue
+            self._tracked[rid].emitted.append(int(tok))
+            decoded.append((rid, tok))
+        finished = [self._translate_finished(f) for f in rep.finished]
+        finished = [f for f in finished if f is not None]
+        admitted = [sup[e] for e in rep.admitted if e in sup]
+        prefill_rid = sup.get(rep.prefill_rid) \
+            if rep.prefill_rid is not None else None
+        return StepReport(admitted, prefill_rid, first_tokens, decoded,
+                          finished, rep.active, rep.lanes)
+
+    def _translate_finished(self, f: FinishedSeq) -> Optional[FinishedSeq]:
+        rid = self._sup_of.pop(f.rid, None)
+        if rid is None:
+            return None
+        self._eng_of.pop(rid, None)
+        t = self._tracked.pop(rid, None)
+        if t is None:
+            return None
+        base = np.asarray(t.replay_base, np.int32)
+        tokens = np.concatenate([base, np.asarray(f.tokens, np.int32)])
+        if t.replays and f.status == "ok":
+            self.stats["recovered_completions"] += 1
+        return FinishedSeq(rid, tokens, int(tokens.shape[0]), t.prompt_len,
+                           f.status)
+
+    def _recover(self, cause: Optional[BaseException]) -> StepReport:
+        """Rebuild the engine and replay every in-flight request.
+
+        Does not run a tick itself — the caller's next ``step()`` resumes
+        decoding, so ticks-to-recover stays measurable. Returns a report
+        whose ``finished`` carries requests whose deadline expired while
+        the engine was down (terminal status ``timeout``, counted)."""
+        if self.stats["restarts"] >= self.cfg.serve.max_restarts:
+            raise EngineRestartExhausted(
+                f"engine crashed again after {self.stats['restarts']} "
+                f"restarts (serve.max_restarts="
+                f"{self.cfg.serve.max_restarts}); giving up with "
+                f"{len(self._tracked)} requests in flight") from cause
+        self.stats["restarts"] += 1
+        # fold the dead engine's counters into the accumulator — restart
+        # must never zero observability
+        for k, v in self._eng.stats.items():
+            self._stats_acc[k] = self._stats_acc.get(k, 0) + v
+        for k, v in self._eng._kernel_fallbacks.items():
+            self._fallbacks_acc[k] = self._fallbacks_acc.get(k, 0) + v
+        if self.params_path is not None:
+            # integrity-checked re-read: if the artifact rotted on disk,
+            # recovery fails loudly (ArtifactIntegrityError) instead of
+            # decoding garbage
+            self.params = load_artifact(self.params_path)
+            self.stats["params_reloads"] += 1
+        self._sup_of.clear()
+        self._eng_of.clear()
+        self._eng = self._make_engine()
+        now = self.clock()
+        finished: List[FinishedSeq] = []
+        for t in sorted(self._tracked.values(), key=lambda x: x.rid):
+            if t.deadline <= now:
+                # expired while the engine was down: the engine never sees
+                # it again, so the supervisor issues the terminal status
+                # (and keeps the timeout accounting consistent)
+                self._stats_acc["timeout_evictions"] = \
+                    self._stats_acc.get("timeout_evictions", 0) + 1
+                self._tracked.pop(t.rid)
+                base = np.asarray(t.emitted, np.int32)
+                finished.append(FinishedSeq(t.rid, base, int(base.shape[0]),
+                                            t.prompt_len, "timeout"))
+                continue
+            batch = {k: (None if v is None else jax.numpy.asarray(v))
+                     for k, v in t.batch.items()}
+            if t.emitted:
+                # prompt + emitted prefix: greedy decode regenerates the
+                # continuation token-identically (deterministic replay)
+                prefix = np.asarray([t.emitted], np.int32)
+                batch["tokens"] = jax.numpy.concatenate(
+                    [batch["tokens"], jax.numpy.asarray(prefix)], axis=1)
+            t.replay_base = list(t.emitted)
+            t.replays += 1
+            mnt = t.max_new - len(t.emitted)
+            rem = t.deadline - now if np.isfinite(t.deadline) else 0.0
+            if mnt <= 0:    # fully emitted but unreported-finished: done
+                self._tracked.pop(t.rid)
+                toks = np.asarray(t.emitted, np.int32)
+                self.stats["recovered_completions"] += 1
+                finished.append(FinishedSeq(t.rid, toks, int(toks.shape[0]),
+                                            t.prompt_len, "ok"))
+                continue
+            eng_rid = self._eng.submit(batch, max_new_tokens=mnt,
+                                       eos_id=t.eos_id, timeout_s=rem,
+                                       force=True)
+            self._sup_of[eng_rid] = t.rid
+            self._eng_of[t.rid] = eng_rid
+            self.stats["replayed_requests"] += 1
+        return StepReport([], None, [], [], finished, self._eng.active,
+                          self._eng.lanes)

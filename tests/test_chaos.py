@@ -1,0 +1,35 @@
+"""Chaos-soak invariants as a pytest surface (``-m chaos``).
+
+The harness itself lives in scripts/chaos_soak.py (docs/FAULTS.md §Chaos
+soak) and scripts/check.sh runs it over seeds 0,1,2; this suite drives
+the same invariant checkers from pytest on *different* seeds, so marker
+runs widen schedule coverage instead of re-verifying CI's fixed seeds.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "scripts"))
+import chaos_soak  # noqa: E402
+
+pytestmark = pytest.mark.chaos
+
+
+class TestChaosSoak:
+    def test_serving_invariants_fresh_seed(self):
+        violations = chaos_soak.run_serving_soak(seed=7, smoke=True)
+        assert violations == []
+
+    def test_quantize_invariants_fresh_seed(self):
+        violations = chaos_soak.run_quantize_soak(seed=7, smoke=True)
+        assert violations == []
+
+    def test_arm_string_is_seed_deterministic(self):
+        import numpy as np
+        a = chaos_soak._arm_string(chaos_soak._SERVE_SITES,
+                                   np.random.default_rng(5))
+        b = chaos_soak._arm_string(chaos_soak._SERVE_SITES,
+                                   np.random.default_rng(5))
+        assert a == b and a          # same rng → same schedule, non-empty

@@ -235,6 +235,77 @@ class TestContinuousScheduler:
                                           np.asarray(ref.tokens[i]))
 
 
+class TestCancelRaces:
+    """cancel(rid) racing the two transient scheduler stages: a prefilled
+    request parked in the ready queue waiting for lane promotion, and a
+    request mid-way through an active chunked prefill. Both must cancel
+    cleanly (no resurrection, no leaked slot) and leave every other
+    request token-identical to the fault-free static reference."""
+
+    def _setup(self, **kw):
+        cfg = get_config("opt-proxy", smoke=True)
+        params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+        return _with_serve(cfg, **kw), params
+
+    def test_cancel_parked_in_ready_queue(self):
+        cfg, params = self._setup(max_batch=1)
+        eng = ContinuousEngine(cfg, params, max_len=40)
+        data = MarkovLM(cfg.model.vocab_size, seed=2)
+        b0, b1 = data.batch(1, 8), data.batch(1, 8)
+        r0 = eng.submit(b0, max_new_tokens=8)
+        r1 = eng.submit(b1, max_new_tokens=8)
+        # tick until r1 has prefilled but is parked: the single lane is
+        # still held by r0, so r1 sits in _ready awaiting promotion
+        for _ in range(20):
+            eng.step()
+            if any(p.req.rid == r1 for p in eng._ready):
+                break
+        else:
+            pytest.fail("r1 never parked in the ready queue")
+        c = eng.cancel(r1)
+        assert c is not None and c.status == "cancelled"
+        assert eng.stats["cancelled"] == 1
+        assert not any(p.req.rid == r1 for p in eng._ready)
+        done = eng.run()
+        # the freed parking spot never resurrects r1...
+        assert r1 not in done
+        assert eng.idle and eng.active == 0
+        # ...and r0's decode is untouched by the race
+        ref = generate(cfg, params, b0, max_new_tokens=8, temperature=0.0)
+        np.testing.assert_array_equal(done[r0].tokens,
+                                      np.asarray(ref.tokens[0]))
+
+    def test_cancel_mid_chunked_prefill(self):
+        # an occupied lane pins prefill to one chunk per tick (the
+        # deficit rule only multi-chunks while a lane would go empty), so
+        # the mid-prefill window is observable across ticks
+        cfg, params = self._setup(prefill_chunk=2, max_batch=1)
+        eng = ContinuousEngine(cfg, params, max_len=40)
+        data = MarkovLM(cfg.model.vocab_size, seed=3)
+        b0, b1 = data.batch(1, 4), data.batch(1, 9)
+        r0 = eng.submit(b0, max_new_tokens=8)
+        eng.step()                      # r0 prefilled and decoding
+        r1 = eng.submit(b1, max_new_tokens=6)
+        eng.step()
+        eng.step()
+        # r1 is the active prefill with some chunks written, more to go —
+        # the mid-prefill window the cancel must hit
+        pf = eng._prefill
+        assert pf is not None and pf.req.rid == r1
+        assert 0 < pf.start < pf.h.shape[1]
+        c = eng.cancel(r1)
+        assert c is not None and c.status == "cancelled"
+        assert c.steps == 0                     # no tokens emitted yet
+        assert eng._prefill is None             # slot released immediately
+        assert eng.stats["cancelled"] == 1
+        done = eng.run()
+        assert r1 not in done and eng.idle
+        # the decoding lane never saw the race
+        ref = generate(cfg, params, b0, max_new_tokens=8, temperature=0.0)
+        np.testing.assert_array_equal(done[r0].tokens,
+                                      np.asarray(ref.tokens[0]))
+
+
 @pytest.mark.serving
 class TestQuantizedDecodePath:
     """generate() with QuantizedTensor params routes every decode dense

@@ -1,0 +1,241 @@
+"""Supervised-serving crash recovery (``-m faults``; robustness PR).
+
+Pins the supervisor contract (serving/supervisor.py, docs/SERVING.md
+§Crash recovery): a mid-trace engine death — the ``serve.engine_step``
+kill site, or a watchdog trip on a hung tick — is recovered by engine
+rebuild + deterministic replay, with outputs **token-identical** to the
+fault-free run, every recovery counted, restarts budget-bounded, and
+params re-read through the integrity-checked artifact path. Plus the
+per-engine kernel-fallback scope regression (two engines in one process
+must not cross-contaminate ``engine_stats()``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import faults
+from repro.core.pipeline import pack_for_serving
+from repro.data import MarkovLM
+from repro.distributed.checkpoint import (ArtifactIntegrityError,
+                                          save_artifact)
+from repro.kernels import ops as kops
+from repro.models import transformer as T
+from repro.serving.scheduler import ContinuousEngine
+from repro.serving.supervisor import EngineRestartExhausted, SupervisedEngine
+
+pytestmark = pytest.mark.faults
+
+
+def _setup(**serve_kw):
+    serve_kw.setdefault("scheduler", "continuous")
+    serve_kw.setdefault("supervise", True)
+    cfg = get_config("opt-proxy", smoke=True)
+    cfg = dataclasses.replace(cfg, serve=dataclasses.replace(
+        cfg.serve, **serve_kw))
+    params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _submit_n(eng, n=4, mnt=6, plen=8, **kw):
+    data = MarkovLM(eng.cfg.model.vocab_size, seed=0)
+    return [eng.submit({"tokens": data.batch(1, plen)["tokens"]},
+                       max_new_tokens=mnt, **kw) for _ in range(n)]
+
+
+def _drain(eng):
+    done = {}
+    while not eng.idle:
+        for f in eng.step().finished:
+            done[f.rid] = f
+    return done
+
+
+class TestCrashRecovery:
+    def test_kill_and_recover_token_identical(self):
+        cfg, params = _setup()
+        clean = SupervisedEngine(cfg, params, max_len=64)
+        crids = _submit_n(clean)
+        cdone = _drain(clean)
+        assert clean.stats["restarts"] == 0
+
+        eng = SupervisedEngine(cfg, params, max_len=64)
+        rids = _submit_n(eng)
+        with faults.inject("serve.engine_step@4"):
+            done = _drain(eng)
+        assert all(done[r].status == "ok" for r in rids)
+        # deterministic replay: token-identical to the fault-free run,
+        # and steps/prompt_len survive the rebuild
+        for r0, r in zip(crids, rids):
+            np.testing.assert_array_equal(cdone[r0].tokens, done[r].tokens)
+            assert done[r].steps == cdone[r0].steps
+            assert done[r].prompt_len == cdone[r0].prompt_len
+        s = eng.engine_stats()
+        assert s["restarts"] == 1
+        assert s["replayed_requests"] >= 1
+        assert s["recovered_completions"] >= 1
+
+    def test_unsupervised_engine_crash_escapes(self):
+        cfg, params = _setup(supervise=False)
+        eng = ContinuousEngine(cfg, params, max_len=64)
+        _submit_n(eng, n=1)
+        with faults.inject("serve.engine_step@1"):
+            with pytest.raises(faults.FaultError):
+                eng.step()
+
+    def test_watchdog_trips_on_hung_tick(self):
+        cfg, params = _setup(step_timeout_s=0.5)
+        clockbox, stride = [0.0], [0.0]
+
+        def clock():
+            clockbox[0] += stride[0]
+            return clockbox[0]
+
+        clean = SupervisedEngine(cfg, params, max_len=64)
+        crids = _submit_n(clean)
+        cdone = _drain(clean)
+
+        eng = SupervisedEngine(cfg, params, max_len=64, clock=clock)
+        rids = _submit_n(eng)
+        eng.step()
+        eng.step()
+        stride[0] = 1.0                 # one tick spans > step_timeout_s
+        rep = eng.step()
+        stride[0] = 0.0
+        assert eng.stats["watchdog_trips"] == 1
+        assert eng.stats["restarts"] == 1
+        done = {f.rid: f for f in rep.finished}
+        while not eng.idle:
+            for f in eng.step().finished:
+                done[f.rid] = f
+        assert all(done[r].status == "ok" for r in rids)
+        # the slow tick's report was absorbed before recovery, so replay
+        # continues from it — still token-identical
+        for r0, r in zip(crids, rids):
+            np.testing.assert_array_equal(cdone[r0].tokens, done[r].tokens)
+
+    def test_restart_budget_exhaustion_is_terminal(self):
+        cfg, params = _setup(max_restarts=2)
+        eng = SupervisedEngine(cfg, params, max_len=64)
+        _submit_n(eng, n=2)
+        with faults.inject("serve.engine_step@1+"):
+            with pytest.raises(EngineRestartExhausted,
+                               match="serve.max_restarts=2"):
+                for _ in range(10):
+                    eng.step()
+        assert eng.stats["restarts"] == 2
+
+    def test_deadline_expired_during_outage_times_out(self):
+        cfg, params = _setup()
+        clockbox = [0.0]
+        eng = SupervisedEngine(cfg, params, max_len=64,
+                               clock=lambda: clockbox[0])
+        rids = _submit_n(eng, n=2, mnt=8, timeout_s=5.0)
+        eng.step()
+        eng.step()
+        eng.step()
+        clockbox[0] = 100.0             # outage outlives every deadline
+        with faults.inject("serve.engine_step@1"):
+            rep = eng.step()            # crash fires before the tick sweep
+        done = {f.rid: f for f in rep.finished}
+        assert sorted(done) == sorted(rids)
+        assert all(done[r].status == "timeout" for r in rids)
+        s = eng.engine_stats()
+        assert s["timeout_evictions"] >= 2
+        assert s["replayed_requests"] == 0
+        assert eng.idle                 # nothing resubmitted
+
+    def test_stats_survive_restart(self):
+        # a quarantine in generation 0 must still be visible after the
+        # rebuild: dead engines' counters fold into the accumulator
+        cfg, params = _setup()
+        eng = SupervisedEngine(cfg, params, max_len=64)
+        rids = _submit_n(eng)
+        with faults.inject("serve.decode_step@2", "serve.engine_step@5"):
+            done = _drain(eng)
+        s = eng.engine_stats()
+        assert s["quarantined"] == 1
+        assert s["restarts"] == 1
+        statuses = [done[r].status for r in rids]
+        assert statuses.count("quarantined") == 1
+        assert statuses.count("ok") == len(rids) - 1
+
+    def test_replay_bypasses_queue_bound(self):
+        cfg, params = _setup(max_queue=1, max_batch=2)
+        eng = SupervisedEngine(cfg, params, max_len=64)
+        rids = []
+        for _ in range(3):              # interleave so the bound never hits
+            rids += _submit_n(eng, n=1)
+            eng.step()
+        with faults.inject("serve.engine_step@1"):
+            done = _drain(eng)
+        # all three in-flight requests were resubmitted force=True — more
+        # than max_queue can hold — with zero rejections
+        s = eng.engine_stats()
+        assert s["replayed_requests"] + s["recovered_completions"] >= 3
+        assert s["rejections"] == 0
+        assert all(done[r].status == "ok" for r in rids)
+
+
+class TestParamsReload:
+    def test_params_reload_through_integrity_check(self, tmp_path):
+        cfg, params = _setup()
+        path = str(tmp_path / "p.params.pkl")
+        save_artifact(path, jax.device_get(params))
+        eng = SupervisedEngine(cfg, max_len=64, params_path=path)
+        rids = _submit_n(eng, n=2)
+        with faults.inject("serve.engine_step@3"):
+            done = _drain(eng)
+        assert eng.stats["params_reloads"] == 1
+        assert all(done[r].status == "ok" for r in rids)
+
+    def test_corrupt_artifact_fails_recovery_loudly(self, tmp_path):
+        cfg, params = _setup()
+        path = str(tmp_path / "p.params.pkl")
+        save_artifact(path, jax.device_get(params))
+        eng = SupervisedEngine(cfg, max_len=64, params_path=path)
+        _submit_n(eng, n=2)
+        raw = bytearray(open(path, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        with faults.inject("serve.engine_step@1"):
+            with pytest.raises(ArtifactIntegrityError):
+                eng.step()
+
+
+class TestEngineStatsIsolation:
+    def test_two_engines_do_not_share_fallback_counters(self, monkeypatch):
+        # fake a zero-VMEM TPU: engine A (impl=auto, int4 weights) must
+        # take the budget fallback at trace time and count it in ITS
+        # engine_stats(); engine B (impl=xla) traced in the same process
+        # while A exists must stay clean — the regression this pins is the
+        # old process-global counter leaking across engines
+        monkeypatch.setattr(kops, "_on_tpu", lambda: True)
+        monkeypatch.setattr(kops, "_VMEM_BUDGET_BYTES", 0)
+        kops.reset_fallback_stats()
+        cfg_a, params = _setup(supervise=False, quantized=True,
+                               w4a16_impl="auto")
+        packed = pack_for_serving(cfg_a, params)
+        cfg_b = dataclasses.replace(cfg_a, serve=dataclasses.replace(
+            cfg_a.serve, w4a16_impl="xla"))
+        eng_a = ContinuousEngine(cfg_a, packed, max_len=64)
+        eng_b = ContinuousEngine(cfg_b, packed, max_len=64)
+        ra = _submit_n(eng_a, n=2)
+        rb = _submit_n(eng_b, n=2)
+        with pytest.warns(RuntimeWarning, match="vmem-budget"):
+            done_a = _drain(eng_a)
+        done_b = _drain(eng_b)
+        fa = eng_a.engine_stats()["kernel_fallbacks"]
+        fb = eng_b.engine_stats()["kernel_fallbacks"]
+        assert sum(fa.values()) >= 1            # A saw its own downgrades
+        assert fb == {}                          # B saw none of A's
+        # both engines decode correctly regardless of scope bookkeeping
+        assert all(done_a[r].status == "ok" for r in ra)
+        assert all(done_b[r].status == "ok" for r in rb)
+        for a, b in zip(ra, rb):
+            np.testing.assert_array_equal(done_a[a].tokens,
+                                          done_b[b].tokens)
+        kops.reset_fallback_stats()
