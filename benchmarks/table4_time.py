@@ -46,11 +46,27 @@ row); the speculative capture-ahead is extra stream work here, while on
 TPU meshes it rides the executor gap (DESIGN.md §2.7 — same family of
 caveat as the interpret-mode pallas wall times below).
 
+Every ``pipeline="overlap"`` row also carries the scheduler's
+``pipeline_stats`` counters (spec_captures / repairs / serial_fallbacks
+plus the per-reason and MoE flip-repair tallies) so the bench artifact is
+EVIDENCE that speculation actually engaged — scripts/check_bench.py gates
+on it: a routed-MoE overlap row whose stats show serial re-capture instead
+of flip repair fails CI. The MoE row additionally gets one
+expert-sharded overlap cell (``quant_mesh="1x2x4"``): the same config
+quantized with the expert mesh axis live, timed in a subprocess because
+the expert axis needs a forced multi-device host platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) that must be set
+before jax initializes. Parity of that path is pinned bitwise in
+tests/test_distributed.py::test_moe_expert_sharded_matches_single.
+
 Row schema and regeneration contract: docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
+import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -156,18 +172,23 @@ def _time_impls(cfg, params, calib, label: str, repeats: int = 3,
         jax.clear_caches()
         qplan.clear_executor_cache()
         t0 = time.perf_counter()
-        quantize_model(cfg, params, calib)
+        _, rep = quantize_model(cfg, params, calib)
         cold = time.perf_counter() - t0
         wall, best = _timed_repeats(cfg, params, calib, repeats)
         ops = ops_by_impl.get(impl, {}) or {}
-        rows.append({
+        row = {
             "config": label, "impl": impl,
             "pipeline": cfg.quant.pipeline,
             "cold_s": round(cold, 2), "warm_s": round(wall, 2),
             "executor_s": round(best[0], 3),
             "stage1_s": round(best[1], 3), "stage2_s": round(best[2], 3),
             "xla_ops": ops.get("s1"), "xla_ops_s2": ops.get("s2"),
-        })
+        }
+        if cfg.quant.pipeline == "overlap":
+            # scheduler evidence: check_bench.py gates on these counters
+            # (speculation engaged, MoE layers flip-repaired not re-planned)
+            row["pipeline_stats"] = dict(rep.pipeline_stats)
+        rows.append(row)
     cfg.quant.pipeline = prev_pipeline
     cfg.quant.gptq_impl = "auto"
     cfg.quant.rpiq_impl = "auto"
@@ -186,6 +207,60 @@ def _time_overlap(cfg, params, calib, label: str, repeats: int = 3) -> list:
         return []
     return _time_impls(cfg, params, calib, label, repeats=repeats,
                        op_counts=False, impls=("xla",), pipeline="overlap")
+
+
+_EXPERT_MESH = "1x2x4"  # DxMxE: rows over model=2, expert lanes over E=4
+
+
+def _expert_cell_main() -> None:
+    """Subprocess entry for the expert-sharded MoE cell: quantize the MoE
+    bench config with ``quant.mesh=_EXPERT_MESH`` under the overlap
+    scheduler and print the bench row as JSON on the last stdout line.
+
+    Runs out-of-process because the expert mesh axis needs a forced
+    multi-device host platform, and ``XLA_FLAGS`` only takes effect
+    before jax initializes (the parent keeps the single real device)."""
+    cfg = bench_config("olmoe-1b-7b")
+    cfg.quant.batched_executor = True
+    cfg.quant.pipeline = "overlap"
+    cfg.quant.mesh = _EXPERT_MESH
+    params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+    calib = calibration_batches(
+        MarkovLM(cfg.model.vocab_size, seed=0), 3, 4, 32)
+    t0 = time.perf_counter()
+    _, rep = quantize_model(cfg, params, calib)
+    cold = time.perf_counter() - t0
+    wall, best = _timed_repeats(cfg, params, calib, repeats=2)
+    print(json.dumps({
+        "config": f"moe-{cfg.model.name}", "impl": "xla",
+        "pipeline": "overlap", "quant_mesh": _EXPERT_MESH,
+        "cold_s": round(cold, 2), "warm_s": round(wall, 2),
+        "executor_s": round(best[0], 3),
+        "stage1_s": round(best[1], 3), "stage2_s": round(best[2], 3),
+        "xla_ops": None, "xla_ops_s2": None,
+        "pipeline_stats": dict(rep.pipeline_stats),
+    }))
+
+
+def _time_expert_sharded(label: str) -> list:
+    """The expert-parallel A/B cell for the MoE row (see
+    :func:`_expert_cell_main`). Skipped under ``REPRO_BENCH_PIPELINE``
+    for the same reason as :func:`_time_overlap`."""
+    if os.environ.get("REPRO_BENCH_PIPELINE"):
+        return []
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.table4_time import _expert_cell_main; "
+         "_expert_cell_main()"],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"expert-sharded bench cell failed:\n{r.stderr[-3000:]}")
+    cell = json.loads(r.stdout.strip().splitlines()[-1])
+    assert cell["config"] == label, (cell["config"], label)
+    return [cell]
 
 
 def _overlap_summary(row: dict) -> None:
@@ -310,7 +385,8 @@ def run(tiny: bool = False) -> list:
          "stage2_s": row["t_perlinear_s2_s"],
          "xla_ops": None, "xla_ops_s2": None},
     ] + _time_impls(cfg, params, calib, label) \
-      + _time_overlap(cfg, params, calib, label)
+      + _time_overlap(cfg, params, calib, label) \
+      + _time_expert_sharded(label)
     _overlap_summary(row)
     # the headline fused-kernel claims, measured (≥10× required per stage):
     # (serial impl rows only — the overlap A/B row shares impl="xla" but

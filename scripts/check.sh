@@ -67,6 +67,21 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table4 --tiny
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run table5 --tiny
 
+# perf-regression gate: the committed BENCH_table4.json trajectory must
+# keep the >=10x fused-kernel op-count ratios AND show the routed-MoE
+# overlap rows still speculating (flip repair, not serial re-planning) —
+# including the expert-sharded cell (scripts/check_bench.py)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/check_bench.py
+
+# 671B-shape lowering smoke: the deepseek-v3-671b routed-MoE quantization
+# cell (capture -> stage-1 -> stage-2 -> quantized-decode serve) must keep
+# lowering on the 512-way forced host mesh with the expert-parallel
+# quant mesh (launch/dryrun.py --quant-cell; lowering only, no compile —
+# the full artifact lives in artifacts/dryrun/, EXPERIMENTS.md §Dry-run)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m repro.launch.dryrun --quant-cell --arch deepseek-v3-671b \
+  --quant-mesh 1x2x256 --out artifacts/dryrun
+
 # overlap-pipeline smoke: the streaming layer-walk scheduler
 # (quant.pipeline=overlap, core/stream.py) must stay runnable end to end
 # on the same tiny table4 leg (parity itself is pinned in

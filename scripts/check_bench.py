@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the committed BENCH_table4.json trajectory.
+
+Two claims the bench artifact exists to evidence, checked on every CI run
+(scripts/check.sh) so a regression cannot land silently behind a
+regenerated JSON:
+
+1. **Fused-kernel dispatch story** — the executed-XLA-op ratio of the
+   ``xla`` serial row over the ``pallas`` serial row must stay >= 10x
+   for BOTH stages on the headline ``moe-*`` row (the paper's
+   dispatch-reduction claim, docs/BENCHMARKS.md), and must never invert
+   (<= 1x) on any config.  The dense-grid stage-2 ratios sit below 10x
+   BY CONSTRUCTION — the xla ``while`` body is counted once (a
+   deliberate lower bound, table4_time.py) and small configs have few
+   blocks — so the 10x floor applies only where the claim is made.  Op
+   counts are deterministic per shape: any drift means code changed.
+
+2. **Routed-MoE overlap stays speculative** — every ``moe-*`` config must
+   have overlap rows whose recorded ``pipeline_stats`` show the streaming
+   scheduler actually speculating (spec_captures > 0) with the MoE layers
+   flip-repaired at plan level rather than degraded to serial re-planning
+   (serial_fallbacks == 0, moe_spec_layers > 0, and no flip-budget
+   trips).  One of those rows must be the expert-sharded cell
+   (``quant_mesh`` set): expert-parallel quantization must stay on the
+   speculative path too.
+
+Exit 0 when every gate holds; exit 1 with one line per violation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MIN_OP_RATIO = 10.0
+
+
+def check(cells: list) -> list:
+    errs = []
+    by_cfg: dict = {}
+    for c in cells:
+        by_cfg.setdefault(c.get("config"), []).append(c)
+
+    ratio_checked = 0
+    for cfg_name, cs in sorted(by_cfg.items()):
+        serial = {c["impl"]: c for c in cs if c.get("pipeline") != "overlap"}
+        xla, pallas = serial.get("xla"), serial.get("pallas")
+        if not (xla and pallas):
+            continue
+        floor = MIN_OP_RATIO if cfg_name.startswith("moe-") else 1.0
+        for key, stage in (("xla_ops", "stage1"), ("xla_ops_s2", "stage2")):
+            nx, np_ = xla.get(key), pallas.get(key)
+            if not (nx and np_):
+                continue
+            ratio_checked += 1
+            ratio = nx / np_
+            if ratio < floor or ratio <= 1.0:
+                errs.append(
+                    f"{cfg_name}/{stage}: op-count ratio {ratio:.1f}x "
+                    f"(xla {nx} / pallas {np_}) < {floor:.0f}x")
+    if not ratio_checked:
+        errs.append("no config carries xla/pallas op counts — "
+                    "regenerate with `python -m benchmarks.run table4`")
+
+    moe_cfgs = [k for k in by_cfg if k and k.startswith("moe-")]
+    if not moe_cfgs:
+        errs.append("no moe-* config in the bench artifact")
+    for cfg_name in sorted(moe_cfgs):
+        overlap = [c for c in by_cfg[cfg_name]
+                   if c.get("pipeline") == "overlap"]
+        if not overlap:
+            errs.append(f"{cfg_name}: no overlap row")
+            continue
+        for c in overlap:
+            tag = cfg_name + ("/expert-sharded" if c.get("quant_mesh")
+                              else "/overlap")
+            st = c.get("pipeline_stats") or {}
+            if not st:
+                errs.append(f"{tag}: overlap row carries no pipeline_stats")
+                continue
+            if not st.get("spec_captures"):
+                errs.append(f"{tag}: scheduler never speculated "
+                            f"(spec_captures={st.get('spec_captures')})")
+            if not st.get("moe_spec_layers"):
+                errs.append(f"{tag}: no MoE layer captured speculatively")
+            if st.get("serial_fallbacks"):
+                errs.append(f"{tag}: regressed to serial re-planning "
+                            f"(serial_fallbacks={st['serial_fallbacks']}, "
+                            f"flip_budget trips="
+                            f"{st.get('fallback_flip_budget')})")
+        if not any(c.get("quant_mesh") for c in overlap):
+            errs.append(f"{cfg_name}: no expert-sharded overlap cell "
+                        f"(quant_mesh)")
+    return errs
+
+
+def main(argv: list) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_table4.json"
+    with open(path) as f:
+        cells = json.load(f)
+    errs = check(cells)
+    if errs:
+        for e in errs:
+            print(f"[check_bench] FAIL {e}", file=sys.stderr)
+        return 1
+    print(f"[check_bench] OK {path}: op-count ratios >= "
+          f"{MIN_OP_RATIO:.0f}x, MoE overlap rows speculative "
+          f"({len(cells)} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -205,6 +205,9 @@ class QuantConfig:
     #                                 "DxM" (e.g. "2x2") = explicit
     #                                 (data, model) mesh — group lanes shard
     #                                 over data, Cout row tiles over model;
+    #                                 "DxMxE" (e.g. "1x1x8") adds an expert
+    #                                 axis: groups made of stacked expert
+    #                                 slabs shard lanes over expert (×data);
     #                                 non-divisible groups stay unsharded
     #                                 (launch/mesh.make_quant_mesh)
     resume: str = "off"             # off | auto: with "auto" and a ckpt_dir,
@@ -238,11 +241,23 @@ class QuantConfig:
     #                                 dispatched speculatively on the
     #                                 pre-quantization residual stream while
     #                                 the executor is in flight, then repaired
-    #                                 exactly after the scatter lands (layers
-    #                                 whose signature marks the repair unsound
-    #                                 — routed MoE — re-capture serially).
+    #                                 exactly after the scatter lands; routed
+    #                                 MoE repairs at the plan level — only
+    #                                 flipped routing assignments re-sort
+    #                                 (core/pipeline._moe_members).
     #                                 Artifacts are bitwise-identical either
-    #                                 way (tests/test_pipeline_stream.py)
+    #                                 way (tests/test_pipeline_stream.py,
+    #                                 tests/test_moe_flip.py)
+    moe_flip_budget: float = 0.5    # overlap + routed MoE: max fraction of
+    #                                 (token, k) routing assignments allowed
+    #                                 to flip between the speculative and
+    #                                 post-quantization streams before the
+    #                                 flip repair gives up on the speculative
+    #                                 plans and re-plans the whole layer
+    #                                 serially (counted as
+    #                                 pipeline_stats["fallback_flip_budget"]);
+    #                                 artifacts are bitwise-identical on
+    #                                 either side of the budget
 
 
 @dataclass

@@ -197,52 +197,114 @@ def _is_moe_layer(layer_params: Dict) -> bool:
 def _layer_repair_sound(layer_params: Dict) -> bool:
     """Is the capture-ahead Hessian repair sound for this layer signature?
 
-    Routed-MoE layers are not: their token routing can shift once the
-    previous layer's scatter lands (the speculative dispatch would route
-    differently than the repaired one), and the per-expert capture runs
-    host-side dispatch bookkeeping (``moe.dispatch`` counts) that cannot
-    ride the async queue. The overlap scheduler degrades those steps to
-    serial re-capture (tests pin this via monkeypatching this predicate).
+    Every current signature is. Dense layers re-propagate their taps on
+    the post-scatter stream through the same compiled entries (the exact
+    repair). Routed-MoE layers — formerly the exception — now repair at
+    the *plan* level: the speculative pass precomputes each batch's
+    dispatch plan, and ``_moe_members`` re-runs only the routing head on
+    the true stream, reusing the sort/capacity structure wholesale when
+    no assignment flipped and re-sorting flipped batches (bounded by
+    ``quant.moe_flip_budget``). Kept as a predicate so tests can
+    monkeypatch a forced-unsound lane (tests/test_pipeline_stream.py).
     """
-    return not _is_moe_layer(layer_params)
+    del layer_params
+    return True
 
 
 def _moe_members(cfg: Config, p_moe: Dict, xs: List[jax.Array],
-                 name: str) -> List[PlanMember]:
+                 name: str, report: Optional[QuantReport] = None,
+                 stats: Optional[Dict] = None,
+                 spec_routes: Optional[List] = None,
+                 layer_name: str = "layer") -> List[PlanMember]:
     """Plan members for the routed experts (paper's method per expert).
 
     ``xs``: per-calibration-batch flat MoE block inputs (T, d), collected
     from the router tap. Per-expert Hessians accumulate as one stacked
     (E, ·, ·) state per input kind — no per-expert Python loop; the
     starved-expert check becomes a flag the executor applies as a mask.
+
+    ``spec_routes`` (overlap scheduler): dispatch plans the speculative
+    capture computed on the PRE-quantization stream. Routing is always
+    recomputed here on the true stream — only the routing head (router
+    matmul + top-k); the sort/capacity *structure* is a pure function of
+    the expert ids (models/moe.py), so batches whose assignments did not
+    flip reuse the speculative structure bitwise and only flipped
+    batches re-sort. Every Hessian accumulates true-stream values
+    through the same ops as serial either way, which is what keeps
+    overlap bitwise-equal to serial on routed MoE.
     """
     qc = cfg.quant
     mc = cfg.model
     e = mc.moe.num_experts
     d, f = p_moe["w_gate"].shape[1:]
+    xs_c = [xt.astype(jnp.dtype(mc.dtype)) for xt in xs]
+
+    def bump(key: str, n: int = 1) -> None:
+        if stats is not None and isinstance(stats.get(key), int):
+            stats[key] += int(n)
+
+    plans: Optional[List[moe_mod.RoutePlan]] = None
+    if spec_routes is not None and len(spec_routes) == len(xs_c):
+        heads = [moe_mod.route_head(mc, p_moe, xt) for xt in xs_c]
+        flips = np.asarray(jnp.stack(
+            [jnp.sum(h.experts != sp.experts)
+             for h, sp in zip(heads, spec_routes)]))    # one host sync
+        n_assign = sum(h.experts.size for h in heads)
+        n_flips = int(flips.sum())
+        bump("moe_spec_layers")
+        bump("moe_flipped_assignments", n_flips)
+        bump("moe_assignments", n_assign)
+        if n_assign and n_flips / n_assign > qc.moe_flip_budget:
+            # too much of the routing moved — the speculative plans buy
+            # nothing; discard them wholesale and re-plan serially
+            bump("fallback_flip_budget")
+            bump("serial_fallbacks")
+        else:
+            plans = []
+            for h, sp, nf in zip(heads, spec_routes, flips):
+                if nf == 0:
+                    plans.append(moe_mod.reuse_plan(sp, h))
+                    bump("moe_plan_reuses")
+                else:
+                    plans.append(moe_mod.plan_from_head(mc, h))
+                    bump("moe_flip_repairs")
+    if plans is None:
+        plans = [moe_mod.route(mc, p_moe, xt) for xt in xs_c]
+
     # stream dispatch over batches: stacked per-expert Hessians for gate/up
     # (input d) and for down (input f, needs the expert mid activations).
+    from repro.models.layers import _act
     H_in = hess.init_hessian(d, batch=e)
     H_mid = hess.init_hessian(f, batch=e)
-    real_counts = np.zeros(e, np.int64)
     x_last_in: Optional[jax.Array] = None
     x_last_mid: Optional[jax.Array] = None
-    last_counts: Optional[jax.Array] = None
-    for bi, xt in enumerate(xs):
-        dsp = moe_mod.dispatch(mc, p_moe, xt.astype(jnp.dtype(mc.dtype)))
-        buf = dsp.buf                                   # (E, C, d)
+    for plan, xt in zip(plans, xs_c):
+        buf = moe_mod.apply_route(plan, xt)             # (E, C, d)
         g = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
                        p_moe["w_gate"].astype(jnp.float32))
         u = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
                        p_moe["w_up"].astype(jnp.float32))
-        from repro.models.layers import _act
         mid = _act(mc.act, g) * u                       # (E, C, f)
-        real_counts += np.asarray(dsp.counts, np.int64)
         H_in = hess.accumulate(H_in, buf)
         H_mid = hess.accumulate(H_mid, mid)
-        if bi == len(xs) - 1:
-            x_last_in, x_last_mid = buf, mid
-            last_counts = dsp.counts
+        x_last_in, x_last_mid = buf, mid
+    last_counts = plans[-1].counts
+
+    # routed-count + capacity-drop tallies in ONE host sync (the per-batch
+    # np.asarray round-trip this loop used to make stalled the async
+    # queue every batch — the stall the overlap schedule exists to avoid)
+    count_stack = jnp.stack([p.counts for p in plans])  # (B, E)
+    dropped = jnp.stack([jnp.sum(~p.keep) for p in plans])
+    tallies = np.asarray(jnp.concatenate(
+        [jnp.sum(count_stack, axis=0),
+         jnp.sum(dropped)[None].astype(jnp.int32)]), np.int64)
+    real_counts, n_dropped = tallies[:e], int(tallies[e])
+    bump("moe_dropped_tokens", n_dropped)
+    if report is not None:
+        # capacity-dropped tokens vanish from the per-expert Hessians by
+        # construction — record them so calibration coverage is honest
+        report.moe_capacity_dropped[layer_name] = \
+            report.moe_capacity_dropped.get(layer_name, 0) + n_dropped
 
     members: List[PlanMember] = []
     for wname, Hst, xl in (("w_gate", H_in, x_last_in),
@@ -297,12 +359,18 @@ class CaptureResult:
     executor finishes). Collected only on request: the serial schedule —
     and the speculative pass itself — would otherwise pin n_batches
     activation arrays per step for nothing.
+
+    ``spec_routes`` is set only by a *speculative* capture of a routed-MoE
+    layer: the per-batch dispatch plans computed on the pre-quantization
+    stream, which ``_moe_members`` verifies against recomputed routing on
+    the true stream and reuses where no assignment flipped.
     """
     hessians: Dict[str, hess.HessianState]
     last_x: Dict[str, jax.Array]
     moe_xs: List[jax.Array]
     h_out: Optional[List[jax.Array]]
     is_moe: bool
+    spec_routes: Optional[List] = None
 
 
 def capture_layer(cfg: Config, step: LayerStep, hs: List[jax.Array],
@@ -312,12 +380,14 @@ def capture_layer(cfg: Config, step: LayerStep, hs: List[jax.Array],
     """Stage (a): stream Hessians over all batches, keep last inputs.
 
     ``speculative`` marks a capture-ahead pass (overlap scheduler): same
-    dispatches on a different stream, results discarded by the exact
-    repair — the flag only documents intent at call sites.
+    dispatches on a different stream, dense results discarded by the
+    exact repair. For a routed-MoE layer the speculative pass
+    additionally dispatches the per-batch routing plans on its stream
+    (``CaptureResult.spec_routes``) — the structure the plan-level
+    flip-repair reuses when the post-scatter routing agrees.
     ``collect_h_out`` retains the per-batch forward outputs (the
     pre-quantization stream the scheduler speculates on).
     """
-    del speculative
     faults.fire("stream.capture_forward")
     qc = cfg.quant
     layer_params = step.resolve_params()
@@ -362,13 +432,28 @@ def capture_layer(cfg: Config, step: LayerStep, hs: List[jax.Array],
                 out = step.apply_fn(layer_params, h, bi)
         if collect_h_out:
             h_out.append(out)
-    return CaptureResult(hessians, last_x, moe_xs, h_out, is_moe)
+    spec_routes: Optional[List] = None
+    if speculative and is_moe and moe_xs:
+        # dispatch the routing plans on the speculative stream while the
+        # previous step's executor is in flight — async device work; the
+        # repair verifies them against the true stream at plan time
+        dtype = jnp.dtype(cfg.model.dtype)
+        spec_routes = [moe_mod.route(cfg.model, layer_params["mlp"],
+                                     xt.astype(dtype)) for xt in moe_xs]
+    return CaptureResult(hessians, last_x, moe_xs, h_out, is_moe,
+                         spec_routes)
 
 
 def plan_layer(cfg: Config, step: LayerStep, cap: CaptureResult,
-               hs: List[jax.Array]) -> Tuple[Dict, List[str], "qplan.QuantPlan"]:
+               hs: List[jax.Array], report: Optional[QuantReport] = None,
+               stats: Optional[Dict] = None,
+               spec_routes: Optional[List] = None
+               ) -> Tuple[Dict, List[str], "qplan.QuantPlan"]:
     """Stage (b): dense taps + stacked MoE expert slices → QuantPlan.
 
+    ``spec_routes`` threads the speculative dispatch plans from the
+    overlap scheduler's capture-ahead to the MoE flip-repair; ``report``/
+    ``stats`` receive capacity-drop and repair counters when given.
     Returns (fresh param-subtree copy, sorted dense names, plan).
     """
     qc = cfg.quant
@@ -383,7 +468,9 @@ def plan_layer(cfg: Config, step: LayerStep, cap: CaptureResult,
     if cap.is_moe:
         assert len(cap.moe_xs) == len(hs), "router tap missed batches"
         members.extend(_moe_members(cfg, new_params["mlp"], cap.moe_xs,
-                                    "mlp"))
+                                    "mlp", report=report, stats=stats,
+                                    spec_routes=spec_routes,
+                                    layer_name=step.name))
     return new_params, dense_names, qplan.build_plan(qc, members)
 
 
@@ -440,7 +527,8 @@ def quantize_layer(cfg: Config, layer_params: Dict, hs: List[jax.Array],
                      hs_slot="h", fwd_key=fwd_key, store=lambda p: None,
                      batch_dependent=batch_dependent)
     cap = capture_layer(cfg, step, hs, fwd_cache)
-    new_params, dense_names, plan = plan_layer(cfg, step, cap, hs)
+    new_params, dense_names, plan = plan_layer(cfg, step, cap, hs,
+                                               report=report)
     results = qplan.execute_plan(cfg.quant, plan, report, mesh=mesh)
     scatter_layer(new_params, dense_names, cap, results)
     return new_params, propagate_layer(cfg, step, new_params, hs, fwd_cache)

@@ -103,6 +103,13 @@ class QuantReport:
     # auto→xla fallback counters observed during the run
     guardrail_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
     kernel_fallbacks: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # calibration-coverage honesty: per-MoE-layer count of (token, k)
+    # assignments dropped by expert capacity during Hessian capture —
+    # these tokens never reach any per-expert Hessian (models/moe.py
+    # ``_capacity``), so a nonzero entry means that layer's calibration
+    # saw fewer instances than the batch implies
+    moe_capacity_dropped: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
         n = len(self.linears)
@@ -716,10 +723,14 @@ def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
     ``batched=None`` reads ``qc.batched_executor``; ``False`` forces the
     legacy per-linear dispatch (parity tests, table4 baseline).
 
-    ``mesh`` (a ``(data, model)`` :class:`jax.sharding.Mesh`) turns on
-    sharded group execution: every batched group whose lane count / Cout
-    pass the divisibility guards runs mesh-wide (DESIGN.md §2.6); the rest
-    — and the whole plan when ``mesh`` is None or ``batched`` is False —
+    ``mesh`` (a ``(data, model)`` or ``(data, model, expert)``
+    :class:`jax.sharding.Mesh`) turns on sharded group execution: every
+    batched group whose lane count / Cout pass the divisibility guards
+    runs mesh-wide (DESIGN.md §2.6); groups made entirely of stacked
+    expert slabs additionally offer their lane axis to the ``expert``
+    mesh axis (expert parallelism — per-expert Hessians already live
+    with their expert, so the placement adds no collectives). The rest —
+    and the whole plan when ``mesh`` is None or ``batched`` is False —
     keep the single-device paths.
 
     ``sync=False`` + ``deferred`` is the overlap schedule's contract
@@ -735,7 +746,8 @@ def execute_plan(qc: QuantConfig, plan: QuantPlan, report: QuantReport,
     for group in plan.groups:
         if batched:
             gshard = quant_group_sharding(
-                mesh, sum(m.lanes for m in group.members), group.key[0])
+                mesh, sum(m.lanes for m in group.members), group.key[0],
+                expert_stacked=all(m.stacked for m in group.members))
             results = _execute_group_batched(qc, group, report, rpiq_enabled,
                                              gshard, sync=sync,
                                              deferred=deferred)

@@ -35,17 +35,33 @@ residual stream changes, e.g. encoder → decoder) — and
        executor records materialize and the per-step wall clock is
        taken (the only synchronization point in overlap mode).
 
+    For a routed-MoE next step the speculative pass additionally
+    dispatches the per-batch routing plans on its stream; at the MoE
+    step's own turn ``pipeline._moe_members`` recomputes only the
+    routing *head* on the true stream, reuses the sort/capacity
+    structure bitwise for batches whose expert assignments did not flip,
+    re-sorts flipped batches (the plan-level **flip repair**), and
+    discards the speculative plans wholesale when the flip fraction
+    exceeds ``quant.moe_flip_budget``. Per-expert Hessians always
+    accumulate true-stream values, so MoE overlap stays bitwise serial.
+
     Speculation is skipped — the scheduler degrades to serial re-capture
     for that step — when the next step's signature marks the repair
-    unsound (``LayerStep.repair_sound=False``: routed MoE, whose token
-    routing can shift after the scatter and whose per-expert capture
-    does host-side dispatch bookkeeping), when the next item is a
+    unsound (``LayerStep.repair_sound=False``; a test seam now that MoE
+    repairs at the plan level), when the next item is a
     :class:`StreamSwitch` fence, when the steps read different stream
     slots, or when capture runs eagerly (``quant.jit_capture=false``).
 
-Per-run counters land in ``report.pipeline_stats`` and the per-step wall
+Per-run counters land in ``report.pipeline_stats`` — the
+``serial_fallbacks`` total is split into per-reason counters
+(``fallback_fence`` / ``fallback_cross_slot`` / ``fallback_eager_capture``
+/ ``fallback_repair_unsound`` / ``fallback_flip_budget``) and the MoE
+flip-repair keeps its own ledger (``moe_spec_layers``,
+``moe_plan_reuses``, ``moe_flip_repairs``, ``moe_flipped_assignments`` /
+``moe_assignments``, ``moe_dropped_tokens``) — and the per-step wall
 clocks in ``report.layer_step_seconds``; parity between the two
-schedules is pinned in ``tests/test_pipeline_stream.py``.
+schedules is pinned in ``tests/test_pipeline_stream.py`` and
+``tests/test_moe_flip.py``.
 """
 from __future__ import annotations
 
@@ -216,6 +232,7 @@ def _report_state(report: QuantReport, stats: Dict[str, Any]) -> Dict:
             "seconds_stage2": report.seconds_stage2,
             "layer_step_seconds": list(report.layer_step_seconds),
             "guardrail_stats": dict(report.guardrail_stats),
+            "moe_capacity_dropped": dict(report.moe_capacity_dropped),
             "pipeline_counters": {k: v for k, v in stats.items()
                                   if isinstance(v, int)}}
 
@@ -228,6 +245,9 @@ def _restore_report(report: QuantReport, state: Dict,
     report.seconds_stage2 = float(state.get("seconds_stage2", 0.0))
     report.layer_step_seconds[:] = state.get("layer_step_seconds", [])
     report.guardrail_stats.update(state.get("guardrail_stats", {}))
+    for layer, n in state.get("moe_capacity_dropped", {}).items():
+        report.moe_capacity_dropped[layer] = \
+            report.moe_capacity_dropped.get(layer, 0) + int(n)
     for k, v in state.get("pipeline_counters", {}).items():
         if isinstance(stats.get(k), int):
             stats[k] += v
@@ -252,7 +272,12 @@ def run_walker(cfg: Config, walker: LayerWalker, report: QuantReport,
     overlap = mode == "overlap"
     use_spec = overlap and qc.jit_capture and fwd_cache is not None
     stats = {"mode": mode, "steps": 0, "spec_captures": 0, "repairs": 0,
-             "serial_fallbacks": 0}
+             "serial_fallbacks": 0, "fallback_fence": 0,
+             "fallback_cross_slot": 0, "fallback_eager_capture": 0,
+             "fallback_repair_unsound": 0, "fallback_flip_budget": 0,
+             "moe_spec_layers": 0, "moe_plan_reuses": 0,
+             "moe_flip_repairs": 0, "moe_flipped_assignments": 0,
+             "moe_assignments": 0, "moe_dropped_tokens": 0}
     items: List[WalkItem] = list(walker.items)
 
     ckpt = None
@@ -335,12 +360,14 @@ def _run_items(cfg, walker, report, fwd_cache, mesh, verbose, qc, overlap,
     from repro.core import pipeline as qpipe   # circular-at-import only
 
     spec_for: Optional[LayerStep] = None
+    spec_routes = None                # MoE routing plans from the spec pass
     for idx, item in enumerate(items):
         if idx < start_idx:
             continue                  # replayed from checkpoint above
         if isinstance(item, StreamSwitch):
             item.run(walker.streams)
             spec_for = None
+            spec_routes = None
             if ckpt is not None:
                 save_fn(idx)
                 ckpt.wait()           # fences always flush
@@ -354,19 +381,31 @@ def _run_items(cfg, walker, report, fwd_cache, mesh, verbose, qc, overlap,
         # overlap (short-circuit), materializing nxt's params at most one
         # step early — they are about to be needed anyway.
         nxt = items[idx + 1] if idx + 1 < len(items) else None
-        can_spec = (use_spec and isinstance(nxt, LayerStep)
-                    and nxt.hs_slot == item.hs_slot
-                    and _repair_sound(qpipe, nxt))
+        spec_block: Optional[str] = None
+        if overlap and nxt is not None:
+            if isinstance(nxt, StreamSwitch):
+                spec_block = "fence"
+            elif not use_spec:
+                spec_block = "eager_capture"
+            elif nxt.hs_slot != item.hs_slot:
+                spec_block = "cross_slot"
+            elif not _repair_sound(qpipe, nxt):
+                spec_block = "repair_unsound"
+        can_spec = overlap and nxt is not None and spec_block is None
         # 1. capture — under overlap this re-propagates the taps on the
         # repaired (post-scatter) stream: the exact Hessian repair of the
         # speculative pass, riding its compiled entries.
         cap = qpipe.capture_layer(cfg, item, hs, fwd_cache,
                                   collect_h_out=can_spec)
+        routes = spec_routes if spec_for is item else None
         if spec_for is item:
             stats["repairs"] += 1
         spec_for = None
-        # 2. plan
-        new_params, dense_names, plan = qpipe.plan_layer(cfg, item, cap, hs)
+        spec_routes = None
+        # 2. plan — spec routing plans (if any) feed the MoE flip repair
+        new_params, dense_names, plan = qpipe.plan_layer(
+            cfg, item, cap, hs, report=report, stats=stats,
+            spec_routes=routes)
         # 3. execute — async under overlap: per-stage sync and record
         # materialization defer to this step's report boundary below.
         deferred: Optional[List[Callable[[], None]]] = \
@@ -378,14 +417,15 @@ def _run_items(cfg, walker, report, fwd_cache, mesh, verbose, qc, overlap,
         # 5. capture-ahead: dispatch the NEXT step's capture forward on
         # THIS step's pre-quantization outputs while the executor is in
         # flight. Discarded at the repair in (1) — overlap stays exact.
-        if use_spec and isinstance(nxt, LayerStep):
-            if can_spec:
-                qpipe.capture_layer(cfg, nxt, cap.h_out, fwd_cache,
-                                    speculative=True)
-                spec_for = nxt
-                stats["spec_captures"] += 1
-            else:
-                stats["serial_fallbacks"] += 1
+        if can_spec:
+            spec_cap = qpipe.capture_layer(cfg, nxt, cap.h_out, fwd_cache,
+                                           speculative=True)
+            spec_for = nxt
+            spec_routes = spec_cap.spec_routes
+            stats["spec_captures"] += 1
+        elif spec_block is not None:
+            stats["serial_fallbacks"] += 1
+            stats["fallback_" + spec_block] += 1
         # 6. propagate quantized activations
         walker.streams[item.hs_slot] = qpipe.propagate_layer(
             cfg, item, new_params, hs, fwd_cache)

@@ -392,6 +392,9 @@ def sds_with_shardings(tree: Any, shardings: Any) -> Any:
 # The Hessian state (L, Cin, Cin) shards over the lane axis only: each
 # lane's damp + Cholesky runs on the devices that hold that lane's rows,
 # and the factor is replicated across the ``model`` axis its row tiles use.
+# With an ``expert`` mesh axis (launch/mesh.py "DxMxE"), groups made
+# entirely of stacked expert slabs shard lanes over expert (×data) instead
+# — expert parallelism for the quantization executors.
 # ---------------------------------------------------------------------------
 
 _QUANT_GROUP_SPECS = {
@@ -412,10 +415,17 @@ class QuantGroupSharding:
     ``lane_axis``/``row_axis`` are mesh axis names or None when the
     corresponding dim failed its divisibility guard; at least one is set
     (``quant_group_sharding`` returns None otherwise, and the executor
-    keeps the group single-device).
+    keeps the group single-device). ``lane_axis`` may also be a *tuple*
+    of axis names (e.g. ``("expert", "data")``) when an expert-stacked
+    group shards lanes over the expert × data product — PartitionSpec
+    accepts the tuple entry directly and shard_map splits the dim over
+    the axes' product.
     """
     mesh: Mesh
-    lane_axis: Optional[str]            # stacked member axis → "data"
+    lane_axis: Any                      # str | tuple[str, ...] | None:
+    #                                     stacked member axis → "data",
+    #                                     or ("expert", ...) for
+    #                                     expert-stacked groups
     row_axis: Optional[str]             # Cout row tiles → "model"
 
     def spec(self, kind: str) -> P:
@@ -434,22 +444,49 @@ class QuantGroupSharding:
                 tuple(d.id for d in self.mesh.devices.flat))
 
 
-def quant_group_sharding(mesh: Optional[Mesh], lanes: int, out_dim: int
+def quant_group_sharding(mesh: Optional[Mesh], lanes: int, out_dim: int,
+                         expert_stacked: bool = False
                          ) -> Optional[QuantGroupSharding]:
     """Placement for a stacked (lanes, out_dim, ·) quant group, or None.
 
-    Divisibility guards mirror the param rules above, per axis: the lane
-    axis is used only when the ``data`` axis size divides ``lanes``
-    evenly (``lanes % |data| == 0``), the row axis only when ``model``
-    divides ``out_dim``. A group that fails both guards stays unsharded
-    (None), so every config remains lowerable regardless of mesh shape.
+    Divisibility guards mirror the param rules above, per axis: a lane
+    axis is used only when its size divides ``lanes`` evenly, the row
+    axis only when ``model`` divides ``out_dim``. A group that fails
+    both guards stays unsharded (None), so every config remains
+    lowerable regardless of mesh shape.
+
+    ``expert_stacked`` marks a group made entirely of stacked expert
+    slabs: when the mesh carries an ``expert`` axis, such groups offer
+    their lane axis to it — preferring the combined
+    ``("expert", "data")`` product, then ``expert`` alone, then the
+    plain ``data`` fallback. Per-expert Hessians travel with their lane,
+    so expert-axis placement adds no collectives beyond what the data
+    axis already pays. Non-expert groups ignore the expert axis
+    entirely.
     """
     if mesh is None:
         return None
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp = sizes.get("data", 1)
     tp = sizes.get("model", 1)
-    lane_ax = "data" if dp > 1 and lanes % dp == 0 else None
+    ep = sizes.get("expert", 1)
+
+    def _axes_fit(axes: Tuple[str, ...]) -> bool:
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        return prod > 1 and lanes % prod == 0
+
+    lane_ax: Any = None
+    candidates: List[Tuple[str, ...]] = []
+    if expert_stacked and ep > 1:
+        candidates += [("expert", "data"), ("expert",)]
+    candidates.append(("data",))
+    for cand in candidates:
+        axes = tuple(a for a in cand if sizes.get(a, 1) > 1)
+        if axes and _axes_fit(axes):
+            lane_ax = axes[0] if len(axes) == 1 else axes
+            break
     row_ax = "model" if tp > 1 and out_dim % tp == 0 else None
     if lane_ax is None and row_ax is None:
         return None

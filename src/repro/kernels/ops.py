@@ -378,8 +378,21 @@ def gptq_block(w: jax.Array, hinv_u: jax.Array, *, bits: int = 4,
     return out
 
 
+def _axes_prod(mesh, axis) -> int:
+    """Device count along a lane placement: str, tuple of axis names
+    (expert-stacked groups shard lanes over e.g. ("expert", "data") —
+    distributed/sharding.quant_group_sharding), or None → 1."""
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    out = 1
+    for a in axes:
+        out *= int(mesh.shape[a])
+    return out
+
+
 def gptq_block_sharded(w: jax.Array, hinv_u: jax.Array, *, mesh,
-                       lane_axis: str | None, row_axis: str | None,
+                       lane_axis=None, row_axis: str | None = None,
                        bits: int = 4, group_size: int = 128,
                        blocksize: int = 128, symmetric: bool = False,
                        impl: str = "auto", interpret: bool | None = None):
@@ -387,7 +400,9 @@ def gptq_block_sharded(w: jax.Array, hinv_u: jax.Array, *, mesh,
 
     w: (B, out, in) stacked group slab; hinv_u: (B, in, in).  The slab is
     laid out ``P(lane_axis, row_axis, None)`` with the Cholesky factors
-    ``P(lane_axis, None, None)`` — the kernel's (member, Cout-tile) grid is
+    ``P(lane_axis, None, None)`` — ``lane_axis`` may be a tuple of mesh
+    axes (expert-stacked groups shard lanes over the ``("expert",
+    "data")`` product); the kernel's (member, Cout-tile) grid is
     exactly the per-shard unit, so each device sweeps its own
     ``(B/|lane|, out/|row|, in)`` slab with no communication; the only
     collective is one psum folding the per-shard Σerr² diagnostics over the
@@ -600,7 +615,7 @@ def rpiq_block_sharded(w_init: jax.Array, w_fp: jax.Array,
                        scales: jax.Array, zeros: jax.Array, *,
                        h_count: jax.Array | None = None,
                        x_count: jax.Array | None = None, mesh=None,
-                       lane_axis: str | None = None,
+                       lane_axis=None,
                        row_axis: str | None = None, bits: int = 4,
                        group_size: int = 128, block_size: int = 128,
                        alpha: float = 0.01, t_max: int = 5,
@@ -642,8 +657,7 @@ def rpiq_block_sharded(w_init: jax.Array, w_fp: jax.Array,
     n = x_last.shape[-2]
     if row_axis is not None:
         rows_local = out_dim // int(mesh.shape[row_axis])
-        lanes_local = b // (int(mesh.shape[lane_axis])
-                            if lane_axis is not None else 1)
+        lanes_local = b // _axes_prod(mesh, lane_axis)
         bo = 128 if rows_local >= 128 else _round_up(max(rows_local, 1), 8)
         pallas_local = t_max >= 1 and impl == "pallas"
         if t_max >= 1 and impl == "auto" and _on_tpu():

@@ -14,6 +14,16 @@ count on first init). Usage::
 Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` holding
 ``memory_analysis()`` (proves it fits), ``cost_analysis()`` FLOPs/bytes and
 the parsed per-collective ICI bytes — the §Roofline inputs.
+
+``--quant-cell`` lowers the quantization path itself at production scale
+instead of the train/prefill/decode forwards: the per-MoE-layer capture
+forward (route + scatter + stacked per-expert Hessian accumulation), the
+stage-1/stage-2 sharded group executors at the 671B expert-slab shapes on
+an expert-parallel ``DxMxE`` quant mesh, and the quantized serve_step on
+the 512-chip production mesh — the capture→quantize→serve chain
+(EXPERIMENTS.md §Dry-run). Lowering-only by default (``--compile`` opts
+in): the cell proves the programs *build* at shape, which is what the
+check.sh smoke leg gates.
 """
 import argparse
 import functools
@@ -98,6 +108,121 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return terms
 
 
+def lower_quant_cell(arch: str, quant_mesh: str = "1x2x256",
+                     overrides=None, do_compile: bool = False):
+    """Lower the capture→quantize→serve chain for a routed-MoE arch.
+
+    Three legs, each timed separately in the artifact dict:
+
+    - ``capture``: one MoE layer's calibration forward at full shape —
+      routing (sort dispatch, capacity) + the (E, C, d) scatter + the
+      stacked per-expert Hessian accumulation for gate/up and down
+      (exactly core/pipeline._moe_members' math);
+    - ``stage1`` / ``stage2``: the cached group executors for the
+      (E, f, d) gate/up expert slab, built against the expert-parallel
+      quant mesh (lanes over ``expert``×``data``, rows over ``model`` —
+      distributed/sharding.quant_group_sharding);
+    - ``serve``: the quantized decode serve_step on the 512-chip
+      production mesh (same program the decode_32k cell compiles).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import hessian as hess
+    from repro.core import plan as qplan
+    from repro.distributed.sharding import quant_group_sharding
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import moe as moe_mod
+    from repro.models.layers import _act
+
+    cfg = get_config(arch)
+    if overrides:
+        apply_overrides(cfg, overrides)
+    mc, qc = cfg.model, cfg.quant
+    m = mc.moe
+    if m.num_experts <= 0:
+        raise ValueError(f"{arch} has no routed experts")
+    d_, m_, e_ = (int(p) for p in quant_mesh.lower().split("x"))
+    qmesh = make_host_mesh(data=d_, model=m_, expert=e_)
+
+    e, d, f = m.num_experts, mc.d_model, m.d_ff_expert
+    t = qc.calib_batch_size * qc.calib_seq_len     # flat tokens per batch
+    cap = moe_mod._capacity(mc, t)
+    wdt = jnp.dtype(mc.dtype)
+    sds = jax.ShapeDtypeStruct
+    art = {"arch": arch, "quant_mesh": quant_mesh, "experts": e,
+           "d_model": d, "d_ff_expert": f, "calib_tokens": t,
+           "capacity": cap, "compiled": bool(do_compile)}
+
+    def _leg(name, lowered_fn):
+        t0 = time.time()
+        lowered = lowered_fn()
+        art[f"{name}_seconds_lower"] = time.time() - t0
+        if do_compile:
+            t0 = time.time()
+            lowered.compile()
+            art[f"{name}_seconds_compile"] = time.time() - t0
+        print(f"[dryrun] quant-cell {arch} {name}: lowered in "
+              f"{art[f'{name}_seconds_lower']:.1f}s", flush=True)
+
+    # --- capture leg -------------------------------------------------------
+    p_moe = {"router": {"w": sds((d, e), jnp.float32)},
+             "w_gate": sds((e, d, f), wdt), "w_up": sds((e, d, f), wdt),
+             "w_down": sds((e, f, d), wdt)}
+
+    def capture(p, xt):
+        plan = moe_mod.route(mc, p, xt)
+        buf = moe_mod.apply_route(plan, xt)
+        g = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                       p["w_gate"].astype(jnp.float32))
+        u = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                       p["w_up"].astype(jnp.float32))
+        mid = _act(mc.act, g) * u
+        H_in = hess.accumulate(hess.init_hessian(d, batch=e), buf)
+        H_mid = hess.accumulate(hess.init_hessian(f, batch=e), mid)
+        return H_in, H_mid, plan.counts
+
+    _leg("capture", lambda: jax.jit(capture).lower(
+        p_moe, sds((t, d), wdt)))
+
+    # --- stage executor legs on the expert-parallel quant mesh -------------
+    gshard = quant_group_sharding(qmesh, lanes=e, out_dim=f,
+                                  expert_stacked=True)
+    if gshard is None:
+        raise ValueError(f"quant mesh {quant_mesh} shards nothing for "
+                         f"(E={e}, out={f})")
+    art["lane_axis"] = str(gshard.lane_axis)
+    art["row_axis"] = str(gshard.row_axis)
+    groups = d // qc.group_size
+    w_s = sds((e, f, d), jnp.float32, sharding=gshard.sharding("w"))
+    H_s = sds((e, d, d), jnp.float32, sharding=gshard.sharding("hessian"))
+    lane_s = sds((e,), jnp.float32, sharding=gshard.sharding("lane"))
+    stage1 = qplan._make_stage1(qc, qc.gptq_impl, False, gshard)
+    _leg("stage1", lambda: stage1.lower(w_s, H_s, lane_s))
+
+    x_s = sds((e, cap, d), jnp.float32, sharding=gshard.sharding("x"))
+    grid_s = sds((e, f, groups), jnp.float32, sharding=gshard.sharding("w"))
+    cnt_s = sds((e,), jnp.int32, sharding=gshard.sharding("lane"))
+    stage2 = qplan._make_stage2(qc, qc.rpiq_impl, gshard)
+    _leg("stage2", lambda: stage2.lower(w_s, w_s, x_s, H_s, grid_s, grid_s,
+                                        h_count=cnt_s, x_count=cnt_s))
+
+    # --- serve leg on the 512-chip production mesh -------------------------
+    pmesh = make_production_mesh(multi_pod=True)
+    rules = shd.make_rules(pmesh, cfg.parallel)
+    with pmesh:
+        specs = input_specs(cfg, SHAPES["decode_32k"], rules,
+                            quantized_decode=True)
+
+        def serve_fn(params, token, pos, caches):
+            with shd.use_rules(rules):
+                return serve_step(cfg, params, token, pos, caches)
+
+        _leg("serve", lambda: jax.jit(serve_fn).lower(
+            specs["params"], specs["token"], specs["pos"],
+            specs["caches"]))
+    return art
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -109,9 +234,38 @@ def main(argv=None):
     ap.add_argument("--fp-decode", action="store_true",
                     help="decode cells with bf16 (not int4) weights")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--quant-cell", action="store_true",
+                    help="lower the capture→quantize→serve chain for the "
+                         "given --arch instead of the forward cells")
+    ap.add_argument("--quant-mesh", default="1x2x256",
+                    help="DxMxE quant mesh for the --quant-cell stage "
+                         "executors (expert-parallel lanes)")
+    ap.add_argument("--compile", action="store_true",
+                    help="with --quant-cell: compile each leg too "
+                         "(lowering-only is the default smoke contract)")
     ap.add_argument("overrides", nargs="*")
     args = ap.parse_args(argv)
     overrides = parse_overrides(args.overrides)
+
+    if args.quant_cell:
+        if not args.arch:
+            ap.error("--quant-cell requires --arch")
+        os.makedirs(args.out, exist_ok=True)
+        tag = f"{args.arch}__quant__{args.quant_mesh}"
+        try:
+            art = lower_quant_cell(args.arch, args.quant_mesh, overrides,
+                                   do_compile=args.compile)
+        except Exception as e:
+            print(f"[dryrun] {tag}: FAILED {e!r}", flush=True)
+            traceback.print_exc()
+            sys.exit(1)
+        path = os.path.join(args.out, tag + ".json")
+        with open(path, "w") as fh:
+            json.dump(art, fh, indent=1)
+        legs = [k[:-len("_seconds_lower")] for k in art
+                if k.endswith("_seconds_lower")]
+        print(f"[dryrun] {tag}: OK ({', '.join(legs)}) → {path}")
+        return
 
     cells = []
     archs = [a for a in ARCH_IDS if a != "opt-proxy"] \

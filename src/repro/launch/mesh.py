@@ -7,9 +7,10 @@ crosses DCN; sharding rules keep per-layer traffic off it (DP gradient
 reduction and optional GPipe stages are the only pod-axis collectives).
 
 ``make_quant_mesh`` resolves the ``quant.mesh`` knob into the
-``(data, model)`` mesh the sharded quantization executor runs on
-(DESIGN.md §2.6, docs/QUANTIZATION.md); the default "off" keeps every
-config on the single-device path.
+``(data, model)`` — or, with an expert-parallel axis, ``(data, model,
+expert)`` — mesh the sharded quantization executor runs on (DESIGN.md
+§2.6, docs/QUANTIZATION.md); the default "off" keeps every config on the
+single-device path.
 """
 from __future__ import annotations
 
@@ -25,22 +26,36 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
-    """Small CPU mesh for tests (requires forced host device count)."""
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1,
+                   expert: int = 1):
+    """Small CPU mesh for tests (requires forced host device count).
+
+    ``expert > 1`` appends the expert-parallel axis (quantization-side
+    only: stacked MoE slabs shard their lane axis over it — DESIGN.md
+    §2.6); it composes with ``data``/``model`` but not ``pod``.
+    """
+    if expert > 1:
+        if pod > 1:
+            raise ValueError("expert axis does not compose with pod axis")
+        return jax.make_mesh((data, model, expert),
+                             ("data", "model", "expert"))
     if pod > 1:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
 
 
 def make_quant_mesh(spec: str = "off") -> Optional[Mesh]:
-    """``quant.mesh`` knob → (data, model) Mesh for sharded group execution.
+    """``quant.mesh`` knob → Mesh for sharded group execution.
 
     - "off" (default) / "" / "none" / "1x1" → None: single-device batched
       execution, exactly the pre-mesh behavior;
     - "auto" → all local devices on the ``data`` axis (lane parallelism
       needs no Cout divisibility, so it degrades most gracefully);
-    - "DxM" (e.g. "2x2", "8x1") → explicit axis sizes over the first D·M
-      local devices.
+    - "DxM" (e.g. "2x2", "8x1") → explicit (data, model) axis sizes over
+      the first D·M local devices;
+    - "DxMxE" (e.g. "1x1x8", "2x1x4") → adds the ``expert`` axis:
+      groups made entirely of stacked expert slabs shard lanes over
+      expert (×data), everything else ignores the axis.
 
     Degrades to None (with a warning) when the spec is malformed or asks
     for more devices than the process has — a quantize config carrying a
@@ -52,23 +67,28 @@ def make_quant_mesh(spec: str = "off") -> Optional[Mesh]:
               f"single-device execution")
         return None
 
-    if not spec or spec in ("off", "none", "1", "1x1"):
+    if not spec or spec in ("off", "none", "1", "1x1", "1x1x1"):
         return None
     if spec == "auto":
         n = jax.device_count()
         if n <= 1:
             return None
         return make_host_mesh(data=n, model=1)
-    data, _, model = spec.lower().partition("x")
+    parts = spec.lower().split("x")
+    if len(parts) not in (2, 3):
+        return _fallback("is not 'off', 'auto', 'DxM' or 'DxMxE'")
     try:
-        d, m = int(data), int(model or 1)
+        sizes = [int(p) for p in parts]
     except ValueError:
-        return _fallback("is not 'off', 'auto' or 'DxM'")
-    if d < 1 or m < 1:
+        return _fallback("is not 'off', 'auto', 'DxM' or 'DxMxE'")
+    if any(s < 1 for s in sizes):
         return _fallback("has non-positive axis sizes")
-    if d * m <= 1:
+    d, m = sizes[0], sizes[1]
+    e = sizes[2] if len(sizes) == 3 else 1
+    total = d * m * e
+    if total <= 1:
         return None
-    if len(jax.devices()) < d * m:
-        return _fallback(f"needs {d * m} devices, have "
+    if len(jax.devices()) < total:
+        return _fallback(f"needs {total} devices, have "
                          f"{len(jax.devices())}")
-    return make_host_mesh(data=d, model=m)
+    return make_host_mesh(data=d, model=m, expert=e)

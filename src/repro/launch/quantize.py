@@ -8,16 +8,20 @@ model); otherwise quantizes a fresh init (still exercises the full path).
 Prints the per-layer Γ convergence summary (paper Table 5) and writes the
 packed int4 params + report.
 
-``quant.mesh`` (e.g. ``quant.mesh=auto`` or ``quant.mesh=8x2``) turns on
-sharded group execution: every quant-plan group that divides the mesh runs
-lane-sharded over ``data`` and row-tiled over ``model`` (DESIGN.md §2.6,
-docs/QUANTIZATION.md). Default "off" = single device.
+``quant.mesh`` (e.g. ``quant.mesh=auto``, ``quant.mesh=8x2``, or
+``quant.mesh=2x1x4`` with an expert axis) turns on sharded group
+execution: every quant-plan group that divides the mesh runs
+lane-sharded over ``data`` and row-tiled over ``model``; stacked MoE
+expert slabs shard lanes over ``expert`` when the third axis is given
+(DESIGN.md §2.6, docs/QUANTIZATION.md). Default "off" = single device.
 
 ``quant.pipeline=overlap`` switches the layer walk to the streaming
 scheduler (core/stream.py, DESIGN.md §2.7): executor dispatches stay
 async and the next layer's capture forward runs speculatively on the
-pre-quantization stream with exact Hessian repair after the scatter.
-Artifacts are bitwise-identical to the default ``serial`` schedule.
+pre-quantization stream with exact Hessian repair after the scatter —
+routed MoE included, via the plan-level flip repair gated by
+``quant.moe_flip_budget``. Artifacts are bitwise-identical to the
+default ``serial`` schedule.
 """
 from __future__ import annotations
 
@@ -89,6 +93,26 @@ def main(argv=None):
     if report.pipeline_stats.get("resumed_at") is not None:
         print(f"[quantize] resumed from checkpoint at walk item "
               f"{report.pipeline_stats['resumed_at']}")
+    st = report.pipeline_stats
+    if st.get("mode") == "overlap":
+        print(f"[quantize] schedule: {st['steps']} steps, "
+              f"{st.get('spec_captures', 0)} speculative captures, "
+              f"{st.get('repairs', 0)} repairs, "
+              f"{st.get('serial_fallbacks', 0)} serial fallbacks")
+        reasons = {k[len("fallback_"):]: v for k, v in st.items()
+                   if k.startswith("fallback_") and v}
+        if reasons:
+            print(f"[quantize] fallback reasons: {reasons}")
+        if st.get("moe_spec_layers"):
+            n_a = max(1, st.get("moe_assignments", 0))
+            print(f"[quantize] moe flip repair: "
+                  f"{st.get('moe_plan_reuses', 0)} plan reuses, "
+                  f"{st.get('moe_flip_repairs', 0)} re-sorts, "
+                  f"flip rate {st.get('moe_flipped_assignments', 0)}/{n_a}"
+                  f" (budget {qc.moe_flip_budget})")
+    if report.moe_capacity_dropped:
+        print(f"[quantize] moe capacity-dropped assignments: "
+              f"{report.moe_capacity_dropped}")
     if report.guardrail_stats:
         print(f"[quantize] guardrail: {report.guardrail_stats}")
     if report.kernel_fallbacks:

@@ -96,13 +96,40 @@ class Dispatch(NamedTuple):
     counts: jax.Array     # (E,) routed tokens per expert (pre-capacity)
 
 
-def dispatch(cfg: ModelConfig, p: Dict, xt: jax.Array,
-             name: str = "moe") -> Dispatch:
-    """Route flat tokens xt: (T, d) to the (E, C, d) expert buffer."""
-    m = cfg.moe
-    t, d = xt.shape
-    e, k = m.num_experts, m.top_k
+class RouteHead(NamedTuple):
+    """The router's output alone: top-k assignments + renormalized gates.
 
+    Everything *structural* about dispatch (sort order, segment
+    positions, capacity keeps, buffer slots) is a pure function of
+    ``experts`` — gate VALUES only weight the combine. That split is
+    what makes the overlap scheduler's flip-repair sound: two streams
+    whose ``experts`` agree elementwise share the entire plan bitwise.
+    """
+    experts: jax.Array    # (T, K) top-k expert ids
+    gates: jax.Array      # (T, K) renormalized gates
+    aux: jax.Array        # scalar load-balance loss
+
+
+class RoutePlan(NamedTuple):
+    """Full dispatch plan: head + the sort-based structural placement."""
+    experts: jax.Array    # (T, K) top-k expert ids
+    gates: jax.Array      # (T, K) renormalized gates
+    aux: jax.Array        # scalar load-balance loss
+    order: jax.Array      # (T*K,) stable argsort of the flat expert ids
+    se: jax.Array         # (T*K,) sorted expert ids
+    st: jax.Array         # (T*K,) source token per sorted assignment
+    sg: jax.Array         # (T*K,) gate per sorted assignment
+    keep: jax.Array       # (T*K,) kept (under capacity)
+    slot: jax.Array       # (T*K,) buffer row (E*C = drop row)
+    counts: jax.Array     # (E,) routed tokens per expert (pre-capacity)
+    cap: int              # static per-expert capacity
+
+
+def route_head(cfg: ModelConfig, p: Dict, xt: jax.Array,
+               name: str = "moe") -> RouteHead:
+    """Router forward + top-k on flat tokens xt: (T, d)."""
+    m = cfg.moe
+    e, k = m.num_experts, m.top_k
     # router in f32 (and tappable: the pipeline reads the MoE block inputs
     # from this tap; the router itself stays full-precision — see pipeline)
     logits = dense(p["router"], xt.astype(jnp.float32),
@@ -116,11 +143,18 @@ def dispatch(cfg: ModelConfig, p: Dict, xt: jax.Array,
     one_hot_top1 = jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32)
     fe = jnp.mean(one_hot_top1, axis=0)
     aux = e * jnp.sum(fe * me) * m.aux_loss_weight
+    return RouteHead(experts, gates, aux)
 
+
+def plan_from_head(cfg: ModelConfig, head: RouteHead) -> RoutePlan:
+    """Structural dispatch plan from the routing head (sort + capacity)."""
+    m = cfg.moe
+    t, k = head.experts.shape
+    e = m.num_experts
     cap = _capacity(cfg, t)
-    flat_e = experts.reshape(-1)                                # (T*K,)
+    flat_e = head.experts.reshape(-1)                           # (T*K,)
     flat_t = jnp.repeat(jnp.arange(t), k)                       # (T*K,)
-    flat_g = gates.reshape(-1)
+    flat_g = head.gates.reshape(-1)
 
     order = jnp.argsort(flat_e, stable=True)
     se = flat_e[order]
@@ -131,12 +165,66 @@ def dispatch(cfg: ModelConfig, p: Dict, xt: jax.Array,
     pos = jnp.arange(t * k) - seg_start[se]                     # pos in expert
     keep = pos < cap
     slot = jnp.where(keep, se * cap + pos, e * cap)             # drop row
+    return RoutePlan(head.experts, head.gates, head.aux, order, se, st,
+                     sg, keep, slot,
+                     (seg_end - seg_start).astype(jnp.int32), cap)
 
+
+def route(cfg: ModelConfig, p: Dict, xt: jax.Array,
+          name: str = "moe") -> RoutePlan:
+    """Full dispatch plan for flat tokens xt: (T, d)."""
+    return plan_from_head(cfg, route_head(cfg, p, xt, name))
+
+
+def reuse_plan(plan: RoutePlan, head: RouteHead) -> RoutePlan:
+    """Rebind a structural plan to a fresh routing head.
+
+    Only valid when ``head.experts`` equals ``plan.experts`` elementwise
+    (the caller checks): the structure is a pure function of the expert
+    ids, so the sort/positions/slots carry over bitwise while the gate
+    values and aux loss come from the new head.
+    """
+    return plan._replace(experts=head.experts, gates=head.gates,
+                         aux=head.aux,
+                         sg=head.gates.reshape(-1)[plan.order])
+
+
+def apply_route(plan: RoutePlan, xt: jax.Array) -> jax.Array:
+    """Scatter flat tokens xt: (T, d) into the (E, C, d) expert buffer."""
+    e = plan.counts.shape[0]
+    cap = plan.cap
+    d = xt.shape[-1]
     buf = jnp.zeros((e * cap + 1, d), xt.dtype)
-    buf = buf.at[slot].set(xt[st].astype(xt.dtype))
-    buf = buf[:-1].reshape(e, cap, d)
-    return Dispatch(buf, slot, st, sg, keep, aux,
-                    (seg_end - seg_start).astype(jnp.int32))
+    buf = buf.at[plan.slot].set(xt[plan.st].astype(xt.dtype))
+    return buf[:-1].reshape(e, cap, d)
+
+
+def flipped_assignments(spec: RoutePlan, true: RoutePlan) -> jax.Array:
+    """(T*K,) bool mask, flat (token-major, k-minor) order: assignments
+    whose dispatch *placement* differs between two plans.
+
+    An assignment is flipped when its expert id changed OR its buffer
+    slot moved — the latter catches the cascades a raw expert comparison
+    misses: a flip elsewhere in a segment displaces every later position
+    in it, and can push previously-kept assignments over capacity (their
+    slot collapses to the drop row). Pinned against a brute-force
+    placement oracle in tests/test_moe_flip.py.
+    """
+    def flat_slot(p: RoutePlan) -> jax.Array:
+        # slot[i] belongs to sorted position i == flat index order[i]
+        return jnp.zeros_like(p.slot).at[p.order].set(p.slot)
+
+    return ((spec.experts.reshape(-1) != true.experts.reshape(-1))
+            | (flat_slot(spec) != flat_slot(true)))
+
+
+def dispatch(cfg: ModelConfig, p: Dict, xt: jax.Array,
+             name: str = "moe") -> Dispatch:
+    """Route flat tokens xt: (T, d) to the (E, C, d) expert buffer."""
+    plan = route(cfg, p, xt, name)
+    buf = apply_route(plan, xt)
+    return Dispatch(buf, plan.slot, plan.st, plan.sg, plan.keep, plan.aux,
+                    plan.counts)
 
 
 def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array,
@@ -156,18 +244,20 @@ def moe_ffn(cfg: ModelConfig, p: Dict, x: jax.Array,
     if (rules is not None and rules.dp_axes
             and getattr(rules, "ep_local_dispatch", True)
             and x.shape[0] % rules.dp_size() == 0):
+        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         dp = tuple(rules.dp_axes)
+        auto = frozenset(rules.mesh.axis_names) - frozenset(dp)
 
         def local(xl):
             out = _moe_ffn_body(cfg, p, xl, name)
             return (out.y, jax.lax.pmean(out.aux_loss, dp),
                     jax.lax.pmean(out.expert_load, dp))
 
-        y, aux, load = jax.shard_map(
+        y, aux, load = shard_map(
             local, mesh=rules.mesh,
             in_specs=(P(dp),), out_specs=(P(dp), P(), P()),
-            axis_names=set(dp), check_vma=False)(x)
+            check_rep=False, auto=auto)(x)
         return MoEOutput(y, aux, load)
     return _moe_ffn_body(cfg, p, x, name)
 

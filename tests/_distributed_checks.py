@@ -236,6 +236,53 @@ def check_sharded_plan_parity():
           f"(mismatch {mism}/{total})")
 
 
+def check_moe_expert_sharded():
+    """Expert-parallel quantization == single-device, end-to-end + bitwise.
+
+    The routed-MoE config quantizes once single-device and once on a
+    ``quant.mesh="1x2x4"`` (data, model, expert) mesh: the stacked
+    (E, ·, ·) expert groups shard lanes over the ``expert`` axis while
+    dense groups keep the data/model rules — the ISSUE 10 scaled-down
+    stand-in for the 671B shape. The olmoe smoke config has E=8 experts,
+    so the expert axis (4) divides the slab. Runs under
+    ``quant.pipeline=overlap`` so the flip repair and the expert-sharded
+    executors compose in one run.
+    """
+    from repro.configs import get_config
+    from repro.core.pipeline import quantize_model
+    from repro.data import MarkovLM, calibration_batches
+    from repro.models import transformer as T
+
+    assert jax.device_count() >= 8, \
+        f"forced host devices missing (XLA_FLAGS?): {jax.device_count()}"
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    cfg.quant.pipeline = "overlap"
+    params = T.init_params(cfg.model, jax.random.PRNGKey(0))
+    calib = calibration_batches(MarkovLM(cfg.model.vocab_size, seed=0),
+                                2, 2, 32)
+    pq1, rep1 = quantize_model(cfg, params, calib)
+    cfg.quant.mesh = "1x2x4"
+    pq2, rep2 = quantize_model(cfg, params, calib)
+    assert rep2.pipeline_stats["moe_spec_layers"] > 0, \
+        rep2.pipeline_stats
+
+    mism, total, worst = 0, 0, 0.0
+    for a, b in zip(jax.tree_util.tree_leaves(pq1),
+                    jax.tree_util.tree_leaves(pq2)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(jax.device_get(b), np.float32)
+        bad = ~np.isclose(a, b, rtol=1e-5, atol=1e-6)
+        mism += int(bad.sum())
+        total += a.size
+        if bad.any():
+            worst = max(worst, float(np.max(np.abs(a - b))))
+    assert mism / total <= 1e-3, (mism, total, worst)
+    for l1, l2 in zip(rep1.linears, rep2.linears):
+        assert (l1.name, l1.mode) == (l2.name, l2.mode), (l1, l2)
+    print(f"OK expert-sharded MoE == single-device "
+          f"(mismatch {mism}/{total})")
+
+
 CHECKS = {
     "sharded_train": check_sharded_train_matches_single,
     "elastic_restore": check_elastic_restore,
@@ -243,6 +290,7 @@ CHECKS = {
     "gpipe": check_gpipe_equivalence,
     "gptq_rows": check_quantize_rows_sharded,
     "plan_sharded": check_sharded_plan_parity,
+    "moe_expert_sharded": check_moe_expert_sharded,
 }
 
 if __name__ == "__main__":

@@ -53,3 +53,10 @@ def test_sharded_plan_matches_batched():
     Group-level/non-divisible parity lives in tests/test_plan_sharded.py,
     which runs under the scripts/check.sh forced-device-count leg."""
     _run("plan_sharded")
+
+
+@pytest.mark.slow
+def test_moe_expert_sharded_matches_single():
+    """Expert-parallel quantization (quant.mesh="1x2x4") == single-device
+    on the routed-MoE config, under the overlap scheduler."""
+    _run("moe_expert_sharded")

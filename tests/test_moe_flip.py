@@ -1,0 +1,171 @@
+"""MoE flip-repair soundness (DESIGN.md §2.7).
+
+Two pins back the overlap scheduler's plan-level MoE repair:
+
+1. ``models/moe.flipped_assignments`` — the detector deciding which
+   speculative routing survives — against a brute-force numpy placement
+   oracle, across random routing perturbations × capacity overflow ×
+   starved experts. The detector must catch *placement* changes, not
+   just expert-id changes: a flip elsewhere in a segment displaces every
+   later position and can push previously-kept assignments over
+   capacity.
+2. Bitwise overlap == serial on the routed-MoE fixture where the
+   post-quantization stream genuinely flips routing assignments (the
+   counters prove the speculation engaged and repaired, not serialized).
+"""
+import types
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.models import moe as moe_mod
+
+from _hypothesis_shim import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# Brute-force placement oracle
+# ---------------------------------------------------------------------------
+
+def _mcfg(e: int, k: int, capacity_factor: float = 1.25):
+    """Minimal stand-in carrying only what plan_from_head reads."""
+    return types.SimpleNamespace(moe=MoEConfig(
+        num_experts=e, top_k=k, capacity_factor=capacity_factor))
+
+
+def _head(experts: np.ndarray, seed: int) -> moe_mod.RouteHead:
+    gates = jax.random.uniform(jax.random.PRNGKey(seed), experts.shape)
+    gates = gates / gates.sum(-1, keepdims=True)
+    return moe_mod.RouteHead(jnp.asarray(experts, jnp.int32), gates,
+                             jnp.float32(0.0))
+
+
+def _oracle_slots(experts: np.ndarray, e: int, cap: int) -> np.ndarray:
+    """(T*K,) flat-order buffer row per assignment, by direct simulation:
+    walk the stable sort order, hand out intra-segment positions first
+    come first served, overflow collapses to the E*cap drop row."""
+    flat = experts.reshape(-1)
+    slot = np.empty(flat.size, np.int64)
+    handed = np.zeros(e, np.int64)
+    for i in np.argsort(flat, kind="stable"):
+        ex = int(flat[i])
+        pos = handed[ex]
+        handed[ex] += 1
+        slot[i] = ex * cap + pos if pos < cap else e * cap
+    return slot
+
+
+def _scenario_experts(rng: np.random.Generator, scenario: str,
+                      t: int, k: int, e: int) -> np.ndarray:
+    if scenario == "overflow":
+        # concentrate most assignments on two experts so segments blow
+        # past capacity and the drop row engages
+        pool = rng.choice([0, 1], size=(t, k)).astype(np.int64)
+        mask = rng.random((t, k)) < 0.2
+        return np.where(mask, rng.integers(0, e, (t, k)), pool)
+    if scenario == "starved":
+        # upper half of the expert range never routed
+        return rng.integers(0, max(1, e // 2), (t, k))
+    return rng.integers(0, e, (t, k))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       scenario=st.sampled_from(["sparse", "overflow", "starved"]))
+def test_flipped_assignments_matches_oracle(seed, scenario):
+    rng = np.random.default_rng(seed)
+    t, k, e = 16, 2, 8
+    cfg = _mcfg(e, k)
+    cap = moe_mod._capacity(cfg, t)
+
+    true_e = _scenario_experts(rng, scenario, t, k, e)
+    # perturb a random subset of assignments to fresh experts — the
+    # "speculative" routing the repair must vet against the true one
+    spec_e = true_e.copy()
+    n_flip = int(rng.integers(0, t * k // 2 + 1))
+    idx = rng.choice(t * k, size=n_flip, replace=False)
+    spec_e.reshape(-1)[idx] = rng.integers(0, e, n_flip)
+
+    spec = moe_mod.plan_from_head(cfg, _head(spec_e, seed))
+    true = moe_mod.plan_from_head(cfg, _head(true_e, seed + 1))
+    got = np.asarray(moe_mod.flipped_assignments(spec, true))
+
+    want = ((spec_e.reshape(-1) != true_e.reshape(-1))
+            | (_oracle_slots(spec_e, e, cap) != _oracle_slots(true_e, e,
+                                                              cap)))
+    np.testing.assert_array_equal(got, want)
+    # self-comparison never flips
+    assert not np.asarray(moe_mod.flipped_assignments(true, true)).any()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6),
+       scenario=st.sampled_from(["sparse", "overflow", "starved"]))
+def test_reuse_plan_bitwise_when_no_flips(seed, scenario):
+    """Zero flips ⇒ the speculative structure rebinds to the true head
+    bitwise — the lemma the overlap flip-repair rests on."""
+    rng = np.random.default_rng(seed)
+    t, k, e = 16, 2, 8
+    cfg = _mcfg(e, k)
+    experts = _scenario_experts(rng, scenario, t, k, e)
+
+    spec = moe_mod.plan_from_head(cfg, _head(experts, seed))
+    head_true = _head(experts, seed + 1)       # same experts, fresh gates
+    reused = moe_mod.reuse_plan(spec, head_true)
+    direct = moe_mod.plan_from_head(cfg, head_true)
+
+    assert reused.cap == direct.cap
+    for f in ("experts", "gates", "aux", "order", "se", "st", "sg",
+              "keep", "slot", "counts"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(reused, f)), np.asarray(getattr(direct, f)),
+            err_msg=f)
+    # and the scatter built from either plan is identical
+    xt = jax.random.normal(jax.random.PRNGKey(seed + 2), (t, 4))
+    np.testing.assert_array_equal(
+        np.asarray(moe_mod.apply_route(reused, xt)),
+        np.asarray(moe_mod.apply_route(direct, xt)))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: overlap == serial with genuine routing flips
+# ---------------------------------------------------------------------------
+
+def test_overlap_bitwise_serial_with_real_flips():
+    """The routed-MoE fixture genuinely flips routing between the
+    speculative (pre-quant) and true (post-quant) streams; the repair
+    must keep packed artifacts bitwise serial while the counters prove
+    speculation engaged."""
+    from test_pipeline_stream import (_assert_reports_equal,
+                                      _assert_trees_bitwise, _run)
+    pq_s, rep_s, packed_s = _run("olmoe-1b-7b", "serial")
+    pq_o, rep_o, packed_o = _run("olmoe-1b-7b", "overlap")
+    st_o = rep_o.pipeline_stats
+    # speculation engaged (flip repair, not serial re-capture) …
+    assert st_o["spec_captures"] == st_o["steps"] - 1 > 0
+    assert st_o["serial_fallbacks"] == 0
+    # … on a fixture with nonzero genuine flips
+    assert st_o["moe_flipped_assignments"] > 0
+    assert st_o["moe_flip_repairs"] > 0
+    assert 0 < st_o["moe_flipped_assignments"] <= st_o["moe_assignments"]
+    # … and the artifacts are bitwise the serial walk's
+    _assert_trees_bitwise(pq_s, pq_o, "moe-flip params")
+    _assert_trees_bitwise(packed_s, packed_o, "moe-flip packed")
+    _assert_reports_equal(rep_s, rep_o)
+
+
+def test_capacity_dropped_tokens_reported():
+    """Tokens dropped by expert capacity during capture are counted per
+    layer — calibration-coverage honesty (ISSUE 10 satellite)."""
+    from test_pipeline_stream import _run
+    _, rep, _ = _run("olmoe-1b-7b", "serial")
+    assert rep.moe_capacity_dropped, "fixture routes past capacity"
+    assert all(isinstance(v, int) and v >= 0
+               for v in rep.moe_capacity_dropped.values())
+    # serial and overlap agree on the per-layer counts
+    _, rep_o, _ = _run("olmoe-1b-7b", "overlap")
+    assert rep_o.moe_capacity_dropped == rep.moe_capacity_dropped

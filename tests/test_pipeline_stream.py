@@ -90,13 +90,35 @@ class TestOverlapParity:
         assert st["repairs"] == st["spec_captures"]
         assert st["serial_fallbacks"] == 0
 
-    def test_moe_signature_degrades_to_serial(self):
-        """Routed-MoE layer signatures mark the Hessian repair unsound —
-        the scheduler must never speculate into them."""
+    def test_moe_speculates_with_flip_repair(self):
+        """Routed MoE now speculates like dense stacks: the plan-level
+        flip repair (core/pipeline._moe_members) verifies the speculative
+        routing on the true stream instead of degrading to serial."""
         _, rep, _ = _run("olmoe-1b-7b", "overlap")
         st = rep.pipeline_stats
-        assert st["spec_captures"] == 0
-        assert st["serial_fallbacks"] == st["steps"] - 1 > 0
+        assert st["spec_captures"] == st["steps"] - 1 > 0
+        assert st["repairs"] == st["spec_captures"]
+        assert st["serial_fallbacks"] == 0
+        # every speculated MoE layer went through the flip-repair ledger
+        assert st["moe_spec_layers"] == st["spec_captures"]
+        assert st["moe_assignments"] > 0
+        assert st["moe_plan_reuses"] + st["moe_flip_repairs"] > 0
+        assert st["fallback_flip_budget"] == 0
+
+    def test_moe_flip_budget_zero_forces_serial_replan(self):
+        """quant.moe_flip_budget=-1 rejects every speculative plan (any
+        flip count exceeds a negative budget) — the layer re-plans
+        serially, counted per reason, and results stay bitwise serial."""
+        pq_s, rep_s, packed_s = _run("olmoe-1b-7b", "serial")
+        pq_o, rep_o, packed_o = _run("olmoe-1b-7b", "overlap",
+                                     moe_flip_budget=-1.0)
+        st = rep_o.pipeline_stats
+        assert st["fallback_flip_budget"] == st["moe_spec_layers"] > 0
+        assert st["serial_fallbacks"] == st["fallback_flip_budget"]
+        assert st["moe_plan_reuses"] == st["moe_flip_repairs"] == 0
+        _assert_trees_bitwise(pq_s, pq_o, "flip-budget params")
+        _assert_trees_bitwise(packed_s, packed_o, "flip-budget packed")
+        _assert_reports_equal(rep_s, rep_o)
 
     def test_encdec_fence_blocks_speculation(self):
         """Speculation never crosses the enc→dec StreamSwitch: with 2+2

@@ -296,6 +296,66 @@ def test_starved_mask_parity_sharded():
     assert modes1.count("rtn-fallback") == 2
 
 
+def _mesh_e(data=1, model=1, expert=4):
+    from jax.sharding import Mesh
+    n = data * model * expert
+    return Mesh(np.array(jax.devices()[:n]).reshape(data, model, expert),
+                ("data", "model", "expert"))
+
+
+@needs_mesh
+def test_quant_group_sharding_expert_axis():
+    """Expert-stacked groups offer lanes to the expert axis; dense groups
+    ignore it (DESIGN.md §2.6 expert parallelism)."""
+    # pure expert axis: lanes over "expert", no row tiling
+    gs = quant_group_sharding(_mesh_e(1, 1, 4), lanes=8, out_dim=64,
+                              expert_stacked=True)
+    assert (gs.lane_axis, gs.row_axis) == ("expert", None)
+    # expert × data product: lanes over the combined tuple
+    gs = quant_group_sharding(_mesh_e(2, 1, 2), lanes=8, out_dim=64,
+                              expert_stacked=True)
+    assert (gs.lane_axis, gs.row_axis) == (("expert", "data"), None)
+    # expert + model: lanes over expert, rows over model
+    gs = quant_group_sharding(_mesh_e(1, 2, 2), lanes=8, out_dim=64,
+                              expert_stacked=True)
+    assert (gs.lane_axis, gs.row_axis) == ("expert", "model")
+    # non-expert groups never touch the expert axis (data has size 1
+    # here, so lanes stay unsharded entirely)
+    gs = quant_group_sharding(_mesh_e(1, 2, 2), lanes=8, out_dim=64,
+                              expert_stacked=False)
+    assert (gs.lane_axis, gs.row_axis) == (None, "model")
+    # divisibility guard: lanes that fit no candidate fall through to
+    # rows-only
+    gs = quant_group_sharding(_mesh_e(1, 2, 2), lanes=3, out_dim=64,
+                              expert_stacked=True)
+    assert (gs.lane_axis, gs.row_axis) == (None, "model")
+
+
+@needs_mesh
+@pytest.mark.parametrize("shape", [(1, 1, 4), (2, 1, 2), (1, 2, 2)])
+def test_expert_sharded_group_parity(shape):
+    """Stacked 8-expert slab over an expert mesh == single-device."""
+    qc = QuantConfig(group_size=16, blocksize=16)
+
+    def stacked():
+        w = jnp.stack([_member(i, 32, 64).w_oi for i in range(8)])
+        x = jax.random.normal(jax.random.PRNGKey(7), (8, 64, 64))
+        h = jnp.einsum("bni,bnj->bij", x, x,
+                       precision=jax.lax.Precision.HIGHEST)
+        st = hess.HessianState(h, jnp.full((8,), 64, jnp.int32))
+        return [qplan.PlanMember(
+            "experts", w, st, x, x_count=jnp.full((8,), 64, jnp.int32),
+            names=[f"experts[{i}]" for i in range(8)])]
+
+    mesh = _mesh_e(*shape)
+    gs = quant_group_sharding(mesh, 8, 32, expert_stacked=True)
+    assert gs is not None and gs.lane_axis is not None
+    _, rep1, r1 = _run_plan(qc, stacked())
+    _, rep2, r2 = _run_plan(qc, stacked(), mesh=mesh)
+    _assert_member_parity(r1, r2)
+    assert [l.mode for l in rep1.linears] == [l.mode for l in rep2.linears]
+
+
 @needs_mesh
 def test_executor_cache_keyed_by_mesh():
     """Same group signature, with vs without mesh → distinct stage entries;
@@ -321,11 +381,15 @@ def test_executor_cache_keyed_by_mesh():
 
 def test_make_quant_mesh_off_variants():
     from repro.launch.mesh import make_quant_mesh
-    for spec in ("off", "", "none", "1x1", "1"):
+    for spec in ("off", "", "none", "1x1", "1", "1x1x1"):
         assert make_quant_mesh(spec) is None
     # malformed specs degrade gracefully instead of raising
-    for spec in ("2x2x2", "x4", "axb", "-2x-2", "0x4"):
+    for spec in ("x4", "axb", "-2x-2", "0x4", "2x2x2x2"):
         assert make_quant_mesh(spec) is None
+    # "DxMxE" is valid grammar; without enough devices it degrades to
+    # single-device like any oversized spec
+    assert make_quant_mesh("2x2x2") is None or \
+        jax.device_count() >= 8
     # uppercase separator is accepted
     assert make_quant_mesh("1X1") is None
 
